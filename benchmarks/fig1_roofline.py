@@ -1,0 +1,43 @@
+"""Fig. 1b/1c: OI roofline and MFU/MBU vs batch size (A100, Llama-2-7B)."""
+from repro.core import oi
+from repro.core.oi import DEVICES, LLAMA2_7B as M
+
+A100 = DEVICES["A100"]
+BATCHES = [1, 2, 4, 8, 16, 32, 64, 128, 203, 256, 512]
+
+
+def rows():
+    out = []
+    for b in BATCHES:
+        oi_gemm = oi.gemm_oi(b)
+        oi_gemv = oi.gemv_oi(M.group)
+        perf_gemm = oi.attainable_flops(A100, oi_gemm)
+        perf_gemv = oi.attainable_flops(A100, oi_gemv)
+        mfu_gemm, mbu_gemm = oi.mfu_mbu(A100, oi_gemm)
+        mfu_gemv, mbu_gemv = oi.mfu_mbu(A100, oi_gemv)
+        out.append(
+            dict(
+                batch=b,
+                oi_gemm=oi_gemm,
+                oi_gemv=oi_gemv,
+                gemm_tflops=perf_gemm / 1e12,
+                gemv_tflops=perf_gemv / 1e12,
+                mfu_gemm=mfu_gemm,
+                mbu_gemm=mbu_gemm,
+                mfu_gemv=mfu_gemv,
+                mbu_gemv=mbu_gemv,
+            )
+        )
+    return out
+
+
+def main(print_fn=print):
+    print_fn("# Fig1b/1c: A100 roofline, GEMM vs GEMV OI and MFU/MBU vs batch")
+    print_fn("batch,oi_gemm,oi_gemv,gemm_tflops,gemv_tflops,mfu_gemm,mbu_gemm,mfu_gemv,mbu_gemv")
+    for r in rows():
+        print_fn(
+            f"{r['batch']},{r['oi_gemm']:.0f},{r['oi_gemv']:.0f},"
+            f"{r['gemm_tflops']:.1f},{r['gemv_tflops']:.2f},"
+            f"{r['mfu_gemm']:.3f},{r['mbu_gemm']:.3f},{r['mfu_gemv']:.4f},{r['mbu_gemv']:.3f}"
+        )
+    print_fn(f"# crossover at batch ~= ridge point {A100.ridge:.0f} (paper: 203)")

@@ -1,0 +1,63 @@
+"""Fig. 7a/7b + §VI-B: throughput scaling, OOM boundary, time breakdown.
+
+GPU-only (L40S) vs GPU+{1,2,4} HPU prototypes, Llama-2-7B, 2K context.
+Normalized to GPU-only @ batch 16 like the paper.  Paper points:
+hetero(4 HPU) @ {16,32,64} = {1.9x, 2.9x, 4.1x}; network share ~10%.
+"""
+from repro.core import oi
+from repro.core.oi import DEVICES, LLAMA2_7B as M
+
+L40S = DEVICES["L40S"]
+HPUP = DEVICES["HPU-PROTO"]
+SEQ_AVG = 1536
+PAPER = {16: 1.9, 32: 2.9, 64: 4.1}
+
+
+def rows():
+    base = oi.step_time_gpu_only(L40S, M, 16, SEQ_AVG)
+    base_tput = 16 / base["total"]
+    out = []
+    max_gpu = oi.max_batch_gpu_only(L40S, M, 2048)
+    for batch in (8, 16, 32, 64):
+        gpu_ok = batch <= max_gpu
+        row = dict(batch=batch, gpu_only="OOM" if not gpu_ok else None)
+        if gpu_ok:
+            t = oi.step_time_gpu_only(L40S, M, batch, SEQ_AVG)
+            row["gpu_only"] = (batch / t["total"]) / base_tput
+        for n_hpu in (1, 2, 4):
+            cap = n_hpu * oi.max_batch_per_hpu(HPUP, M, SEQ_AVG)
+            if batch > cap:
+                row[f"hpu{n_hpu}"] = "OOM"
+                continue
+            t = oi.step_time_hetero(L40S, HPUP, M, batch, SEQ_AVG, n_hpu=n_hpu)
+            row[f"hpu{n_hpu}"] = (batch / t["total"]) / base_tput
+            if n_hpu == 4:
+                row["breakdown"] = t
+        out.append(row)
+    return out
+
+
+def main(print_fn=print):
+    print_fn("# Fig7a: normalized throughput (GPU-only@16 = 1.0); OOM per §VI-B")
+    print_fn("batch,gpu_only,hpu1,hpu2,hpu4,paper_hpu4,dev_pct")
+    for r in rows():
+        def fmt(v):
+            return v if isinstance(v, str) else (f"{v:.2f}" if v is not None else "-")
+        paper = PAPER.get(r["batch"], "")
+        dev = ""
+        if paper and not isinstance(r["hpu4"], str):
+            dev = f"{(r['hpu4'] - paper) / paper * 100:+.0f}%"
+        print_fn(
+            f"{r['batch']},{fmt(r['gpu_only'])},{fmt(r['hpu1'])},"
+            f"{fmt(r['hpu2'])},{fmt(r['hpu4'])},{paper},{dev}"
+        )
+    print_fn("# Fig7b: generation-stage time breakdown, GPU+4HPU")
+    print_fn("batch,linear_ms,attention_ms,network_ms,network_share")
+    for r in rows():
+        t = r.get("breakdown")
+        if not t:
+            continue
+        print_fn(
+            f"{r['batch']},{t['linear']*1e3:.2f},{t['attention']*1e3:.2f},"
+            f"{t['network']*1e3:.2f},{t['network']/t['total']:.2%}"
+        )

@@ -1,0 +1,36 @@
+"""Fig. 8: MFU vs batch, GPU-only vs heterogeneous (linear-only GPU)."""
+from repro.core import oi
+from repro.core.oi import DEVICES, LLAMA2_7B as M
+
+L40S = DEVICES["L40S"]
+H100 = DEVICES["H100-NVL"]
+HPUP = DEVICES["HPU-PROTO"]
+HPU = DEVICES["HPU"]
+SEQ_AVG = 1536
+
+
+def rows():
+    out = []
+    for batch in (16, 32, 64, 128, 256, 512):
+        r = {"batch": batch}
+        for name, gpu in (("l40s", L40S), ("h100", H100)):
+            t = oi.step_time_gpu_only(gpu, M, batch, SEQ_AVG)
+            r[f"{name}_only"] = oi.mfu_end_to_end(gpu, M, batch, SEQ_AVG, t)
+        # hetero: GPU runs only linear; enough HPUs to hold the batch
+        for name, gpu, hpu in (("l40s_hpu", L40S, HPUP), ("h100_hpu", H100, HPU)):
+            n_hpu = max(1, -(-batch // max(oi.max_batch_per_hpu(hpu, M, SEQ_AVG), 1)))
+            t = oi.step_time_hetero(gpu, hpu, M, batch, SEQ_AVG, n_hpu=n_hpu)
+            useful = M.linear_flops_per_token() * batch
+            r[name] = useful / (t["total"] * gpu.flops)
+        out.append(r)
+    return out
+
+
+def main(print_fn=print):
+    print_fn("# Fig8: MFU vs batch (paper: GPU-only ~1%, L40S+HPU up to 44%, H100+HPU 39%)")
+    print_fn("batch,l40s_only,h100_only,l40s_hpu,h100_hpu")
+    for r in rows():
+        print_fn(
+            f"{r['batch']},{r['l40s_only']:.3f},{r['h100_only']:.3f},"
+            f"{r['l40s_hpu']:.3f},{r['h100_hpu']:.3f}"
+        )

@@ -1,0 +1,51 @@
+"""Kernel micro-benchmarks (interpret mode on CPU -> correctness-scale
+timings; TPU numbers come from the dry-run roofline, not wall clock)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main(print_fn=print):
+    print_fn("# kernel micro-bench (CPU interpret mode): us_per_call vs jnp oracle")
+    print_fn("name,us_per_call,oracle_us,max_abs_err")
+    key = jax.random.key(0)
+    B, S, Hkv, G, D = 2, 256, 2, 4, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Hkv * G, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lengths = jnp.full((B,), S, jnp.int32)
+
+    t_kern = _time(lambda: ops.decode_attention(q, kc, vc, lengths, block_s=64))
+    t_ref = _time(lambda: ref.naive_decode_attention(q, kc, vc, lengths))
+    err = float(
+        jnp.max(jnp.abs(ops.decode_attention(q, kc, vc, lengths, block_s=64)
+                        - ref.naive_decode_attention(q, kc, vc, lengths)))
+    )
+    print_fn(f"decode_attention_b{B}s{S}g{G},{t_kern:.0f},{t_ref:.0f},{err:.2e}")
+
+    Sq = 128
+    q2 = jax.random.normal(ks[0], (B, Sq, Hkv * G, D), jnp.float32)
+    k2 = jax.random.normal(ks[1], (B, Sq, Hkv, D), jnp.float32)
+    v2 = jax.random.normal(ks[2], (B, Sq, Hkv, D), jnp.float32)
+    t_kern = _time(lambda: ops.flash_attention(q2, k2, v2, block_q=64, block_k=64))
+    t_ref = _time(lambda: ref.naive_attention(q2, k2, v2))
+    err = float(jnp.max(jnp.abs(
+        ops.flash_attention(q2, k2, v2, block_q=64, block_k=64)
+        - ref.naive_attention(q2, k2, v2))))
+    print_fn(f"flash_attention_b{B}s{Sq}g{G},{t_kern:.0f},{t_ref:.0f},{err:.2e}")
+
+
+def _bench_wrap(fn):
+    return fn

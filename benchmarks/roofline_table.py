@@ -1,0 +1,41 @@
+"""§Roofline table: three terms per (arch x shape x mesh) from the dry-run
+artifacts in results/dryrun (the brief's required analysis)."""
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(pattern="*.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        base = os.path.basename(path)[: -len(".json")]
+        if base.count(".") > 2:  # skip tagged perf-iteration cells (kv_*, ga*, kvq8...)
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def main(print_fn=print):
+    cells = load_cells()
+    if not cells:
+        print_fn(f"# no dry-run artifacts under {RESULTS}; run "
+                 "`python -m repro.launch.dryrun --all` first")
+        return
+    print_fn("# §Roofline: per-cell three-term roofline (seconds/step; TPU v5e "
+             "constants: 197 TF bf16, 819 GB/s HBM, 50 GB/s ICI)")
+    print_fn("arch,shape,mesh,chips,compute_s,memory_s,collective_s,bottleneck,"
+             "model_gflops,useful_ratio,roofline_frac,peak_GiB_per_dev,kv_policy")
+    from repro.analysis.roofline import recompute_cell
+
+    for c in cells:
+        r = recompute_cell(c).as_dict()
+        print_fn(
+            f"{c['arch']},{c['shape']},{c['mesh']},{c['n_chips']},"
+            f"{r['compute_s']:.3e},{r['memory_s']:.3e},{r['collective_s']:.3e},"
+            f"{r['bottleneck']},{r['model_flops']/1e9:.0f},"
+            f"{r['useful_ratio']:.3f},{r['roofline_frac']:.3f},"
+            f"{c['memory']['peak_bytes_per_dev']/2**30:.2f},{c['env']['kv_policy']}"
+        )

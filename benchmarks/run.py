@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig1_roofline    Fig. 1b/1c  OI roofline + MFU/MBU vs batch
+  fig7_throughput  Fig. 7a/7b  throughput scaling, OOM, time breakdown
+  fig8_mfu         Fig. 8      MFU vs batch, GPU-only vs heterogeneous
+  fig9_energy      Fig. 9      tokens/s/W
+  roofline_table   brief       3-term roofline per dry-run cell
+  kernel_bench     —           Pallas kernels vs oracle (interpret mode)
+
+``python -m benchmarks.run [name ...]`` — default runs everything.
+"""
+import sys
+
+from benchmarks import (
+    fig1_roofline,
+    fig7_throughput,
+    fig8_mfu,
+    fig9_energy,
+    kernel_bench,
+    roofline_table,
+)
+
+ALL = {
+    "fig1_roofline": fig1_roofline.main,
+    "fig7_throughput": fig7_throughput.main,
+    "fig8_mfu": fig8_mfu.main,
+    "fig9_energy": fig9_energy.main,
+    "roofline_table": roofline_table.main,
+    "kernel_bench": kernel_bench.main,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    for name in names:
+        print(f"\n==== {name} ====")
+        ALL[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Ablation: the paper's Fig. 7/8/9 sweep + the TPU-native analogue.
+
+Part 1 reproduces the GPU/HPU analytical sweep (what the paper measured).
+Part 2 compares KV placement policies for the TPU port using the balancer
+(what the dry-run lowers), for each assigned architecture.
+
+    PYTHONPATH=src python examples/offload_ablation.py
+"""
+from repro.configs import SHAPES, all_arch_ids, get_config
+from repro.core import balance, oi
+from repro.core.oi import DEVICES, LLAMA2_7B
+
+print("== Part 1: paper sweep (Llama-2-7B, L40S + HPU prototypes) ==")
+L40S, HPUP = DEVICES["L40S"], DEVICES["HPU-PROTO"]
+base = oi.step_time_gpu_only(L40S, LLAMA2_7B, 16, 1536)
+print(f"GPU-only@16: {16/base['total']:.0f} tok/s "
+      f"(attention {base['attention']*1e3:.1f}ms of {base['total']*1e3:.1f}ms)")
+for n in (1, 2, 4):
+    t = oi.step_time_hetero(L40S, HPUP, LLAMA2_7B, 64, 1536, n_hpu=n)
+    cap = n * oi.max_batch_per_hpu(HPUP, LLAMA2_7B, 1536)
+    tag = "OOM" if 64 > cap else f"{64/t['total']:.0f} tok/s ({64/t['total']/(16/base['total']):.1f}x)"
+    print(f"GPU+{n}HPU@64: {tag}")
+
+print("\n== Part 2: TPU-native placement policies (decode_32k, 512 chips) ==")
+axes = {"pod": 2, "data": 16, "model": 16}
+print(f"{'arch':22s} {'policy':9s} {'shards':6s} {'t_att(ms)':9s} {'t_lin(ms)':9s} bottleneck")
+for arch in all_arch_ids():
+    cfg = get_config(arch)
+    p = balance.plan(cfg, SHAPES["decode_32k"], axes)
+    print(f"{arch:22s} {p.kv_policy:9s} {p.kv_shards:6d} "
+          f"{p.t_attention*1e3:9.2f} {p.t_linear*1e3:9.2f} {p.bottleneck}")

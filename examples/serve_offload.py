@@ -1,0 +1,43 @@
+"""Serving with HPU-style offloaded decode + continuous batching.
+
+Demonstrates the paper's system end to end: the balancer picks the KV
+placement policy, the engine continuous-batches 12 requests through 4
+decode slots, and decode attention runs through the offload layout.
+
+    PYTHONPATH=src python examples/serve_offload.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES
+from repro.configs.reduced import reduce_config
+from repro.core import balance
+from repro.core.placement import Env
+from repro.models.registry import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.sampler import SamplerConfig
+
+cfg = reduce_config("yi-34b")   # GQA group 7 -> narrow-GEMM decode regime
+axes = {"data": 1, "model": 1}  # single host; the dry-run exercises the pod
+plan = balance.plan(cfg, SHAPES["decode_32k"], {"data": 16, "model": 16})
+print(f"production plan for {cfg.name}: kv_policy={plan.kv_policy} "
+      f"sub_batches={plan.sub_batches} bottleneck={plan.bottleneck} "
+      f"kv_shards={plan.kv_shards}")
+
+model = build_model(cfg, Env())  # CPU-local execution of the same code path
+params = model.init(jax.random.key(0))
+engine = Engine(model, params, n_slots=4, max_seq=48,
+                sampler=SamplerConfig(), sub_batches=plan.sub_batches)
+
+rng = np.random.default_rng(7)
+for uid in range(12):
+    prompt = rng.integers(1, cfg.vocab, size=int(rng.integers(4, 16))).astype(np.int32)
+    engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=8))
+
+t0 = time.time()
+stats = engine.run()
+print(f"prefills={stats.prefills} decode_steps={stats.decode_steps} "
+      f"generated={stats.generated} peak_active={stats.peak_active} "
+      f"({stats.generated/(time.time()-t0):.1f} tok/s on CPU)")

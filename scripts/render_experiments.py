@@ -1,0 +1,76 @@
+"""Render the §Roofline summary table into EXPERIMENTS.md from results/dryrun.
+
+    PYTHONPATH=src python scripts/render_experiments.py
+"""
+import glob
+import json
+import os
+import re
+
+from repro.analysis.roofline import recompute_cell
+
+RESULTS = "results/dryrun"
+TARGET = "EXPERIMENTS.md"
+MARKER = "<!-- ROOFLINE_TABLE -->"
+
+
+def recompute(c: dict) -> dict:
+    return recompute_cell(c).as_dict()
+
+
+def fmt(x, digits=3):
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    return f"{x:.1e}".replace("e-0", "e-")
+
+
+def main():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(path)[: -len(".json")]
+        parts = base.split(".")
+        # skip perf-variant tagged cells in the baseline table
+        if any(p.startswith(("kv_", "off_", "sub", "sp", "bfc", "a2a",
+                             "nofsdp", "ga", "kvq")) for p in parts[3:]):
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+
+    lines = [
+        "| arch | shape | mesh | chips | compute (s) | memory (s) | "
+        "collective (s) | bottleneck | useful | frac | peak GiB/dev | policy |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    cells.sort(key=lambda c: (c["arch"], order.get(c["shape"], 9), c["mesh"]))
+    for c in cells:
+        r = recompute(c)
+        pol = c["env"]["kv_policy"] if c["kind"] == "decode" else (
+            "sp" if c["env"].get("sequence_parallel") else "-")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['n_chips']} | "
+            f"{fmt(r['compute_s'])} | {fmt(r['memory_s'])} | "
+            f"{fmt(r['collective_s'])} | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{c['memory']['peak_bytes_per_dev']/2**30:.1f} | {pol} |"
+        )
+    table = "\n".join(lines)
+
+    with open(TARGET) as f:
+        text = f.read()
+    if MARKER in text:
+        text = text.replace(MARKER, table)
+    else:
+        # replace a previously-rendered table (between the §Roofline header
+        # sentinel lines) — idempotent re-render
+        pat = re.compile(r"\| arch \| shape \| mesh \|.*?(?=\n\nObservations)", re.S)
+        text = pat.sub(table, text)
+    with open(TARGET, "w") as f:
+        f.write(text)
+    print(f"rendered {len(cells)} cells into {TARGET}")
+
+
+if __name__ == "__main__":
+    main()

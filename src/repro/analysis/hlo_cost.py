@@ -1,0 +1,414 @@
+"""HLO-text cost model with while-loop trip-count accounting.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE (verified in
+this container), so for scan-over-layers models it understates FLOPs,
+bytes, and — critically for §Roofline — collective bytes by ~n_layers x.
+This walker parses the (optimized) HLO text, builds the computation call
+graph, extracts static trip counts from while-condition constants, and
+returns totals that weight each while body by its trip count:
+
+  flops        2 * prod(out) * prod(contracting dims)  per dot
+  bytes        operand + result bytes of top-level ops (fusion internals
+               excluded: they live in registers/VMEM)
+  collectives  operand bytes per all-gather / all-reduce / reduce-scatter
+               / all-to-all / collective-permute, by kind
+
+Validated against ``cost_analysis()`` on loop-free graphs in the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body)=(%[\w\.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w\.\-]+)")
+_CONST_RE = re.compile(r"=\s*[su]32\[\]\s+constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"(%[\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_count: int = 0
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        self.coll_bytes += other.coll_bytes * times
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] += v * times
+        self.coll_count += int(other.coll_count * times)
+
+
+def _shapes_bytes(text: str) -> float:
+    """Sum bytes of every array shape literal in a type string (tuples ok)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> list of op lines."""
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$", stripped)
+        if cur is None and m and ("->" in stripped or stripped.startswith("ENTRY")):
+            name = m.group(1)
+            if not name.startswith("%"):
+                name = "%" + name
+            cur = name
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if stripped.startswith("}"):
+                cur = None
+                continue
+            if stripped:
+                comps[cur].append(stripped)
+    return comps
+
+
+def _entry_name(hlo: str, comps: dict[str, list[str]]) -> str:
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            m = re.match(r"^ENTRY\s+(%?[\w\.\-]+)", s)
+            if m:
+                name = m.group(1)
+                return name if name.startswith("%") else "%" + name
+    return next(iter(comps))
+
+
+def _opcode_of(rhs: str) -> str:
+    """rhs looks like 'f32[2,3]{1,0} dot(%a, %b), ...' or '(tuple...) while(...)'."""
+    # strip the type (possibly a tuple type with nested parens/brackets)
+    i = 0
+    depth = 0
+    n = len(rhs)
+    # the type ends at the first space at depth 0 after any leading token
+    while i < n:
+        c = rhs[i]
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+        elif c == " " and depth == 0:
+            break
+        i += 1
+    rest = rhs[i:].strip()
+    m = re.match(r"([\w\-]+)", rest)
+    return m.group(1) if m else ""
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    consts = []
+    for line in cond_lines:
+        m = _CONST_RE.search(line)
+        if m:
+            consts.append(int(m.group(1)))
+    if not consts:
+        return 1
+    return max(consts)
+
+
+IN_PLACE_OPS = ("scatter", "dynamic-update-slice")
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps = _parse_computations(hlo_text)
+        self.entry = _entry_name(hlo_text, self.comps)
+        # per-computation symbol tables: %op -> type string
+        self.symbols: dict[str, dict[str, str]] = {}
+        for name, lines in self.comps.items():
+            table = {}
+            for line in lines:
+                m = _DEF_RE.match(line)
+                if m:
+                    rhs = m.group(2)
+                    # type = prefix up to opcode (see _opcode_of)
+                    i, depth = 0, 0
+                    while i < len(rhs):
+                        c = rhs[i]
+                        if c in "([{":
+                            depth += 1
+                        elif c in ")]}":
+                            depth -= 1
+                        elif c == " " and depth == 0:
+                            break
+                        i += 1
+                    table[m.group(1)] = rhs[:i]
+            self.symbols[name] = table
+        self._memo: dict[tuple[str, bool], Cost] = {}
+
+    # ----------------------------------------------------------- main walk
+    def cost(self, comp: str | None = None, inside_fusion: bool = False,
+             trips_ctx: int = 1) -> Cost:
+        comp = comp or self.entry
+        key = (comp, inside_fusion, trips_ctx)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        self._memo[key] = total  # guard cycles
+        table = self.symbols.get(comp, {})
+        for line in self.comps.get(comp, []):
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            opcode = _opcode_of(rhs)
+            out_type = table.get(name, "")
+            args = self._operands(rhs, opcode)
+
+            if opcode == "dot":
+                total.flops += self._dot_flops(rhs, out_type, args, table)
+                if not inside_fusion:
+                    total.bytes += self._io_bytes(out_type, args, table)
+            elif opcode in IN_PLACE_OPS:
+                # XLA updates these in place (buffer aliasing): actual HBM
+                # traffic is ~2x the update payload, not the whole buffer
+                if not inside_fusion:
+                    ops_bytes = sorted(
+                        _shapes_bytes(table.get(a, "")) for a in args
+                    )
+                    total.bytes += 2.0 * sum(ops_bytes[:-1]) if ops_bytes else 0.0
+            elif opcode in ("dynamic-slice", "gather"):
+                # reads only the sliced region (~output bytes), not the
+                # whole operand buffer
+                if not inside_fusion:
+                    total.bytes += 2.0 * _shapes_bytes(out_type)
+            elif opcode in ("convolution",):
+                # rare here; approximate as output-bytes only
+                if not inside_fusion:
+                    total.bytes += self._io_bytes(out_type, args, table)
+            elif opcode == "while":
+                body = _CALLED_RE.search(rhs)
+                cond = _COND_RE.search(rhs)
+                trips = 1
+                if cond and cond.group(1) in self.comps:
+                    trips = _trip_count(self.comps[cond.group(1)])
+                if body and body.group(1) in self.comps:
+                    total.add(
+                        self.cost(body.group(1), inside_fusion, trips_ctx * trips),
+                        trips,
+                    )
+            elif opcode == "fusion":
+                called = _CALLED_RE.search(rhs)
+                in_place = has_slice = False
+                if called and called.group(1) in self.comps:
+                    inner = self.cost(called.group(1), True, trips_ctx)
+                    total.flops += inner.flops
+                    total.coll_bytes += inner.coll_bytes
+                    for k, v in inner.coll_by_kind.items():
+                        total.coll_by_kind[k] += v
+                    total.coll_count += inner.coll_count
+                    inner_ops = {
+                        _opcode_of(m2.group(2))
+                        for l2 in self.comps[called.group(1)]
+                        if (m2 := _DEF_RE.match(l2))
+                    }
+                    in_place = bool(inner_ops & set(IN_PLACE_OPS))
+                    has_slice = bool(inner_ops & {"dynamic-slice", "gather"})
+                    # XLA:CPU legalizes bf16 dots by materializing f32
+                    # copies of the operands; a TPU MXU reads bf16 natively,
+                    # so pure convert/layout fusions are counted free
+                    # (documented in EXPERIMENTS.md §Roofline caveats).
+                    if inner_ops <= {
+                        "convert", "copy", "reshape", "transpose",
+                        "broadcast", "bitcast", "parameter", "constant",
+                    }:
+                        continue
+                if not inside_fusion:
+                    out_b = _shapes_bytes(out_type)
+                    op_bs = sorted(
+                        (_shapes_bytes(table.get(a, "")) for a in args),
+                        reverse=True,
+                    )
+                    if in_place:
+                        # aliased in/out buffer: traffic ~ 2x update payload
+                        b = 2.0 * sum(op_bs[1:])
+                    elif has_slice:
+                        # sliced reads touch ~(operand / loop-trips) of a
+                        # stacked buffer per iteration (scan xs indexing),
+                        # never less than the fusion output size
+                        b = out_b + sum(
+                            min(ob, max(out_b, ob / trips_ctx)) for ob in op_bs
+                        )
+                    else:
+                        b = out_b + sum(op_bs)
+                    total.bytes += b
+            elif opcode in ("call", "conditional", "custom-call"):
+                for c in _CALLED_RE.findall(rhs):
+                    if c in self.comps:
+                        total.add(self.cost(c, inside_fusion, trips_ctx))
+                if not inside_fusion:
+                    total.bytes += self._io_bytes(out_type, args, table)
+            elif any(opcode.startswith(c) for c in COLLECTIVES):
+                kind = next(c for c in COLLECTIVES if opcode.startswith(c))
+                by = sum(_shapes_bytes(table.get(a, "")) for a in args)
+                if by == 0.0:
+                    by = _shapes_bytes(out_type)
+                total.coll_bytes += by
+                total.coll_by_kind[kind] += by
+                total.coll_count += 1
+                if not inside_fusion:
+                    total.bytes += self._io_bytes(out_type, args, table)
+            elif opcode in ("parameter", "constant", "get-tuple-element", "tuple",
+                            "bitcast", "copy-start", "copy-done"):
+                continue
+            else:
+                if not inside_fusion:
+                    total.bytes += _shapes_bytes(out_type)
+        return total
+
+    # -------------------------------------------------------------- helpers
+    @staticmethod
+    def _operands(rhs: str, opcode: str) -> list[str]:
+        i = rhs.find(opcode)
+        if i < 0:
+            return []
+        j = rhs.find("(", i)
+        if j < 0:
+            return []
+        depth = 0
+        for k in range(j, len(rhs)):
+            if rhs[k] == "(":
+                depth += 1
+            elif rhs[k] == ")":
+                depth -= 1
+                if depth == 0:
+                    inner = rhs[j + 1 : k]
+                    return _OPERAND_RE.findall(inner)
+        return []
+
+    def _io_bytes(self, out_type: str, args: list[str], table: dict[str, str]) -> float:
+        b = _shapes_bytes(out_type)
+        for a in args:
+            b += _shapes_bytes(table.get(a, ""))
+        return b
+
+    def _dot_flops(self, rhs: str, out_type: str, args: list[str], table: dict) -> float:
+        out_elems = 1.0
+        shapes = _SHAPE_RE.findall(out_type)
+        if shapes:
+            dt, dims = shapes[0]
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        out_elems *= int(d)
+        contract = 1.0
+        m = _CONTRACT_RE.search(rhs)
+        if m and args:
+            lhs_type = table.get(args[0], "")
+            lhs_shapes = _SHAPE_RE.findall(lhs_type)
+            if lhs_shapes:
+                _, dims = lhs_shapes[0]
+                dim_list = [int(d) for d in dims.split(",") if d]
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(dim_list):
+                        contract *= dim_list[int(idx)]
+        return 2.0 * out_elems * contract
+
+
+    # ------------------------------------------------------ attribution
+    def attribute(self, top: int = 20) -> list[tuple[float, str, str]]:
+        """Top byte-moving ops (walker rules), as (bytes, opcode, out_type).
+        Used by the §Perf loop to find what to optimize next."""
+        rows: list[tuple[float, str, str]] = []
+
+        def walk(comp: str, weight: float, trips_ctx: int):
+            table = self.symbols.get(comp, {})
+            for line in self.comps.get(comp, []):
+                m = _DEF_RE.match(line)
+                if not m:
+                    continue
+                name, rhs = m.group(1), m.group(2)
+                opcode = _opcode_of(rhs)
+                out_type = table.get(name, "")
+                args = self._operands(rhs, opcode)
+                if opcode == "while":
+                    body = _CALLED_RE.search(rhs)
+                    cond = _COND_RE.search(rhs)
+                    trips = 1
+                    if cond and cond.group(1) in self.comps:
+                        trips = _trip_count(self.comps[cond.group(1)])
+                    if body and body.group(1) in self.comps:
+                        walk(body.group(1), weight * trips, trips_ctx * trips)
+                    continue
+                if opcode in ("parameter", "constant", "get-tuple-element",
+                              "tuple", "bitcast", "copy-start", "copy-done"):
+                    continue
+                b = 0.0
+                if opcode in IN_PLACE_OPS:
+                    ops_bytes = sorted(_shapes_bytes(table.get(a, "")) for a in args)
+                    b = 2.0 * sum(ops_bytes[:-1]) if ops_bytes else 0.0
+                elif opcode in ("dynamic-slice", "gather"):
+                    b = 2.0 * _shapes_bytes(out_type)
+                elif opcode == "fusion":
+                    called = _CALLED_RE.search(rhs)
+                    in_place = has_slice = False
+                    if called and called.group(1) in self.comps:
+                        inner_ops = {
+                            _opcode_of(m2.group(2))
+                            for l2 in self.comps[called.group(1)]
+                            if (m2 := _DEF_RE.match(l2))
+                        }
+                        in_place = bool(inner_ops & set(IN_PLACE_OPS))
+                        has_slice = bool(inner_ops & {"dynamic-slice", "gather"})
+                        if inner_ops <= {"convert", "copy", "reshape", "transpose",
+                                         "broadcast", "bitcast", "parameter", "constant"}:
+                            continue
+                    out_b = _shapes_bytes(out_type)
+                    op_bs = sorted((_shapes_bytes(table.get(a, "")) for a in args), reverse=True)
+                    if in_place:
+                        b = 2.0 * sum(op_bs[1:])
+                    elif has_slice:
+                        b = out_b + sum(min(ob, max(out_b, ob / trips_ctx)) for ob in op_bs)
+                    else:
+                        b = out_b + sum(op_bs)
+                else:
+                    b = self._io_bytes(out_type, args, table) if opcode == "dot" else _shapes_bytes(out_type)
+                if b:
+                    rows.append((weight * b, opcode, out_type[:64]))
+
+        walk(self.entry, 1.0, 1)
+        rows.sort(reverse=True)
+        return rows[:top]
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).cost()

@@ -1,0 +1,184 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Per (arch x shape x mesh) cell:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_chip / HBM_bw_per_chip
+  collective = wire_bytes_per_chip / ICI_bw_per_chip
+
+The SPMD HLO module IS the per-chip program, so walker totals are already
+per-chip (equivalently: total/chips).  Wire bytes apply ring factors:
+all-reduce moves ~2x its operand bytes per chip, the others ~1x.
+
+MODEL_FLOPS (analytic "useful" FLOPs) uses 6·N·D for training (N = active
+params for MoE) and 2·N_active per generated token for decode, plus the
+attention term; the ratio MODEL_FLOPS / (HLO_FLOPs_per_chip * chips)
+exposes remat/padding/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.balance import _active_params, kv_bytes_per_seq
+from repro.core.oi import DEVICES
+
+V5E = DEVICES["TPU-V5E"]
+WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    step_s: float            # max of the three terms (perfect overlap bound)
+    roofline_frac: float     # useful compute time / bound step time
+
+    def as_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def wire_bytes(coll_by_kind: dict[str, float]) -> float:
+    return sum(WIRE_FACTOR.get(k, 1.0) * v for k, v in coll_by_kind.items())
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic useful FLOPs for one step of this cell (global)."""
+    n_active = _active_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6.0 * n_active * tokens
+        # causal attention: fwd 2*2*L*H*Dh*S^2/2 per seq; x3 for bwd
+        if cfg.family not in ("rwkv6",):
+            Dh = cfg.resolved_head_dim()
+            flops += 3.0 * B * 2 * 2 * cfg.n_layers * cfg.n_heads * Dh * S * S / 2
+        return flops
+    if shape.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * n_active * tokens
+        if cfg.family not in ("rwkv6",):
+            Dh = cfg.resolved_head_dim()
+            flops += B * 2 * 2 * cfg.n_layers * cfg.n_heads * Dh * S * S / 2
+        return flops
+    # decode: one token per sequence vs full cache
+    flops = 2.0 * n_active * B
+    if cfg.family == "rwkv6":
+        H = cfg.d_model // cfg.rwkv.head_dim
+        flops += B * cfg.n_layers * H * cfg.rwkv.head_dim**2 * 6
+    else:
+        Dh = cfg.resolved_head_dim()
+        flops += B * 2 * 2 * cfg.n_layers * cfg.n_heads * Dh * S
+    return flops
+
+
+def model_bytes(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    n_params: float,
+    n_chips: int = 256,
+    model_shards: int = 16,
+) -> float:
+    """Analytic minimal *per-chip* HBM traffic per step x n_chips.
+
+    Layout-aware: in the serving layout weights are sharded over `model`
+    but replicated over `data`, so each chip must read params/model_shards
+    per step regardless of batch — the reachable floor, not 6N/B idealism.
+    Training (FSDP) shards weights over all chips.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    p_bytes = n_params * 2.0
+    act = 2.0 * B * S * cfg.d_model * cfg.n_layers * 2.0  # write+read once/layer
+    if shape.kind == "train":
+        # params read (fwd+bwd) + grad write + adam m,v read/write (fp32):
+        # fully sharded (FSDP) -> global count
+        return 3.0 * p_bytes + 16.0 * n_params + 2.0 * act
+    per_chip_weights = p_bytes / max(model_shards, 1)
+    if shape.kind == "prefill":
+        cache_w = kv_bytes_per_seq(cfg, S) * B
+        return per_chip_weights * n_chips + act + cache_w
+    # decode: per-chip weight-shard read + sharded cache read
+    return per_chip_weights * n_chips + kv_bytes_per_seq(cfg, S) * B
+
+
+def model_wire_bytes(cfg: ModelConfig, shape: ShapeConfig, n_params: float) -> float:
+    """Analytic minimal global interconnect traffic per step."""
+    B = shape.global_batch
+    if shape.kind == "train":
+        return 4.0 * n_params  # ring all-reduce of bf16 grads ~ 2 x 2 bytes
+    Dh = cfg.resolved_head_dim()
+    return (
+        cfg.n_layers * B * (2 * cfg.n_heads + 2 * cfg.n_kv_heads) * Dh * 2.0
+    )  # paper's boundary Q/KV/out vectors
+
+
+def roofline(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    n_chips: int,
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    coll_by_kind: dict[str, float],
+    n_params: float | None = None,
+    dev=V5E,
+    weight_shards: int | None = None,
+) -> Roofline:
+    compute_s = flops_per_chip / dev.flops
+    memory_s = bytes_per_chip / dev.bw
+    collective_s = wire_bytes(coll_by_kind) / dev.net
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_per_chip * n_chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    step = max(terms.values())
+    n_params = n_params if n_params is not None else _active_params(cfg)
+    if weight_shards is not None:
+        model_shards = weight_shards
+    else:
+        model_shards = 16 if n_chips >= 256 else max(n_chips // 16, 1)
+    useful_times = {
+        "compute": mf / (n_chips * dev.flops),
+        "memory": model_bytes(cfg, shape, n_params, n_chips, model_shards)
+        / (n_chips * dev.bw),
+        "collective": model_wire_bytes(cfg, shape, n_params) / (n_chips * dev.net),
+    }
+    return Roofline(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=mf,
+        hlo_flops_total=hlo_total,
+        useful_ratio=useful,
+        step_s=step,
+        roofline_frac=useful_times[bottleneck] / step if step else 0.0,
+    )
+
+
+def recompute_cell(cell: dict) -> Roofline:
+    """Re-derive a dry-run JSON cell's roofline with layout-correct weight
+    shards (wide-EP cells shard expert weights over all chips)."""
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(cell["arch"])
+    shape = SHAPES[cell["shape"]]
+    w = cell["walker"]
+    n = cell["n_chips"]
+    ws = n if cell["env"].get("ep_wide") else (16 if n >= 256 else max(n // 16, 1))
+    return roofline(
+        cfg, shape, n, w["flops_per_dev"], w["bytes_per_dev"],
+        w["coll_by_kind"], n_params=cell["n_params"], weight_shards=ws,
+    )

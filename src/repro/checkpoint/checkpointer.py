@@ -1,0 +1,155 @@
+"""Fault-tolerant checkpointing (no orbax in this container).
+
+Design (multi-host ready, exercised single-host here):
+  * step-atomic: write into ``<dir>/tmp.<step>/``, fsync, then
+    ``os.rename`` to ``step_<N>`` — a crash never leaves a readable
+    half-checkpoint.
+  * manifest.json records the flattened tree structure, dtypes, shapes,
+    mesh metadata, and step, so restore can re-shard onto a *different*
+    mesh/device count (elastic restart).
+  * async: ``save(..., blocking=False)`` snapshots to host memory
+    (device_get) and writes on a daemon thread; ``wait()`` joins.
+  * keep_n garbage collection.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+Pytree = Any
+
+_SEP = "/"
+
+# numpy's npz cannot round-trip ml_dtypes (bf16/fp8); store as uint views
+_EXOTIC: dict[np.dtype, np.dtype] = {
+    np.dtype(ml_dtypes.bfloat16): np.dtype(np.uint16),
+    np.dtype(ml_dtypes.float8_e4m3fn): np.dtype(np.uint8),
+    np.dtype(ml_dtypes.float8_e5m2): np.dtype(np.uint8),
+}
+
+
+def _flatten(tree: Pytree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype in _EXOTIC:
+            arr = arr.view(_EXOTIC[arr.dtype])
+        flat[key] = arr
+    return flat
+
+
+def _unflatten_into(template: Pytree, flat: dict[str, np.ndarray]) -> Pytree:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, tmpl in paths:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        want = np.dtype(tmpl.dtype) if hasattr(tmpl, "dtype") else arr.dtype
+        if want in _EXOTIC and arr.dtype == _EXOTIC[want]:
+            arr = arr.view(want)
+        leaves.append(arr.astype(want, copy=False))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Pytree, meta: dict | None = None, blocking: bool = True):
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        if blocking:
+            self._write(step, host_state, meta or {})
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state, meta or {}), daemon=True
+            )
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_state: Pytree, meta: dict):
+        tmp = os.path.join(self.dir, f"tmp.{step}")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(host_state)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": step,
+            "keys": sorted(flat),
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "meta": meta,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep_n]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        template: Pytree,
+        step: int | None = None,
+        shardings: Pytree | None = None,
+    ) -> tuple[int, Pytree]:
+        """Restore into the structure of ``template``.  If ``shardings``
+        (NamedSharding pytree) is given, leaves are placed sharded — this
+        is the elastic-restart path (the new mesh may differ from the one
+        that saved)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with np.load(os.path.join(path, "arrays.npz")) as npz:
+            flat = {k: npz[k] for k in npz.files}
+        state = _unflatten_into(template, flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda arr, sh: jax.device_put(arr, sh), state, shardings
+            )
+        return step, state
+
+    def manifest(self, step: int) -> dict:
+        with open(os.path.join(self.dir, f"step_{step:010d}", "manifest.json")) as f:
+            return json.load(f)

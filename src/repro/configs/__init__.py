@@ -1,0 +1,62 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Arch ids accept dashes or underscores or dots interchangeably.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401  (re-exported)
+    DEEPSEEK,
+    DENSE,
+    ENCDEC,
+    FAMILIES,
+    MOE,
+    RWKV6,
+    SHAPES,
+    ZAMBA2,
+    HybridConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    ParallelConfig,
+    RunConfig,
+    RWKVConfig,
+    ShapeConfig,
+    SSMConfig,
+    TrainConfig,
+    shapes_for,
+)
+
+# arch id -> module name under repro.configs
+ARCHS: dict[str, str] = {
+    "yi-34b": "yi_34b",
+    "llama3.2-1b": "llama3_2_1b",
+    "llama3.2-3b": "llama3_2_3b",
+    "minicpm-2b": "minicpm_2b",
+    "rwkv6-7b": "rwkv6_7b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "internvl2-76b": "internvl2_76b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+
+def _canon(arch: str) -> str:
+    key = arch.strip().lower().replace("_", "-")
+    for k in ARCHS:
+        if key == k or key == k.replace(".", "-") or key.replace("-", "") == k.replace(
+            ".", ""
+        ).replace("-", ""):
+            return k
+    raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[_canon(arch)]}")
+    return mod.CONFIG
+
+
+def all_arch_ids() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,38 @@
+"""deepseek-v3-671b — MLA + MoE(1 shared + 256 routed, top-8) + MTP
+[arXiv:2412.19437].
+
+Brief's d_ff=2048 is the per-expert intermediate dim; the first
+``moe_layer_start`` layers are dense with d_ff = d_expert*(top_k+n_shared)
+= 18432 (matches the DeepSeek-V3 paper).  The offloaded decode cache is the
+compressed latent (kv_lora 512 + rope 64) using the absorbed formulation.
+"""
+from repro.configs.base import DEEPSEEK, MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family=DEEPSEEK,
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,       # MLA: all heads read the shared latent cache
+    d_ff=18432,           # dense-layer FFN dim (= 2048 * 9)
+    vocab=129280,
+    head_dim=128,         # v head dim; qk dims come from MLAConfig
+    rope_theta=10_000.0,
+    moe=MoEConfig(
+        n_experts=256,
+        top_k=8,
+        n_shared=1,
+        d_expert=2048,
+        score_func="sigmoid",
+        moe_layer_start=3,
+    ),
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    mtp_depth=1,
+)

@@ -1,0 +1,23 @@
+"""internvl2-76b — InternViT + LM backbone (llama3-70b-like) [arXiv:2404.16821].
+
+Per the brief, only the transformer BACKBONE is modeled; the InternViT
+frontend is a stub — ``launch/specs.py`` provides precomputed patch
+embeddings of length ``frontend_len`` which are prepended to the token
+embeddings.
+"""
+from repro.configs.base import DENSE, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family=DENSE,
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=128256,
+    head_dim=128,
+    rope_theta=500_000.0,
+    frontend="patches",
+    frontend_len=256,
+)

@@ -1,0 +1,20 @@
+"""minicpm-2b — WSD schedule, llama-like arch [arXiv:2404.06395].
+
+kv=36 == n_heads -> MHA: the paper's own prototype regime (group=1, pure
+GEMV attention, OI ~ 1).  Trained with the WSD schedule, which is
+implemented in ``repro.training.optimizer``.
+"""
+from repro.configs.base import DENSE, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family=DENSE,
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_ff=5760,
+    vocab=122753,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,22 @@
+"""rwkv6-7b — "Finch", attention-free, data-dependent decay [arXiv:2404.05892].
+
+No KV cache / SDPA, so the paper's technique is inapplicable in original
+form (DESIGN.md §4); the WKV state recurrence is handled by the generalized
+memory-bound-offload path.  Sub-quadratic -> runs long_500k.
+"""
+from repro.configs.base import RWKV6, ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family=RWKV6,
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,           # 4096 / head_dim 64
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab=65536,
+    head_dim=64,
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64, mix_lora=32),
+    attention_offload=False,
+    subquadratic=True,
+)

@@ -1,0 +1,25 @@
+"""zamba2-1.2b — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+38 mamba2 blocks; one *shared* (weight-tied) attention+MLP block is invoked
+every ``shared_block_period`` layers with per-slot LoRA deltas, seeing
+[x, x_embed] concatenated (d_model*2 -> d_model per the Zamba design).
+Hybrid -> runs long_500k; the shared attention blocks carry ordinary KV
+caches and are offloaded per the paper.
+"""
+from repro.configs.base import ZAMBA2, HybridConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family=ZAMBA2,
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32000,
+    head_dim=64,          # shared attention block head dim (2048*2/64H)
+    rope_theta=10_000.0,
+    ssm=SSMConfig(d_state=64, d_head=64, n_groups=1, d_conv=4, chunk=128, expand=2),
+    hybrid=HybridConfig(shared_block_period=6, lora_rank=8, concat_input=True),
+    subquadratic=True,
+)

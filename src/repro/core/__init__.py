@@ -1,0 +1,10 @@
+"""The paper's contribution as composable JAX modules.
+
+  oi         - operational-intensity & perf model (paper §III, Table I)
+  placement  - KV partitioning policies (paper Fig. 4) + sharding rules
+  offload    - disaggregated decode attention (GPU-HPU split as layouts)
+  pipeline   - staggered sub-batch pipelining (paper Fig. 3)
+  balance    - attention/linear load balancing (paper §IV-C)
+"""
+from repro.core import balance, offload, oi, pipeline, placement  # noqa: F401
+from repro.core.placement import Env  # noqa: F401

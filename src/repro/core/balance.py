@@ -1,0 +1,125 @@
+"""GPU/HPU-analogue load balancing (paper §IV-C).
+
+The paper tunes batch size / sequence mix so HPU attention time matches
+GPU linear time.  On the TPU mesh the knobs are: the KV placement policy
+(how many chips' HBM serve the attention GEMV), the number of pipelined
+sub-batches, and batch-per-chip.  ``plan()`` does the napkin math from the
+hardware constants and returns the chosen configuration plus expected
+stage times, so launch scripts and the serving engine can self-configure.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.oi import BYTES_PER_EL, DEVICES, Device
+from repro.core.placement import POLICIES, kv_rules, lanes
+from repro.models.common import resolve_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    kv_policy: str
+    sub_batches: int
+    t_linear: float          # s per decode step, compute side
+    t_attention: float       # s per decode step, HPU-layout side
+    t_boundary: float        # s, Q/KV boundary collective
+    bottleneck: str
+    kv_shards: int           # chips the cache actually spans
+
+
+def _active_params(cfg: ModelConfig) -> float:
+    """Per-token active linear params (MoE counts top-k + shared only)."""
+    D, F, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    Dh = cfg.resolved_head_dim()
+    if cfg.mla is not None:
+        a = cfg.mla
+        attn = D * a.q_lora_rank + a.q_lora_rank * cfg.n_heads * (
+            a.qk_nope_head_dim + a.qk_rope_head_dim
+        )
+        attn += D * a.kv_lora_rank + D * a.qk_rope_head_dim
+        attn += a.kv_lora_rank * cfg.n_heads * (a.qk_nope_head_dim + a.v_head_dim)
+        attn += cfg.n_heads * a.v_head_dim * D
+    else:
+        attn = D * (cfg.n_heads + 2 * cfg.n_kv_heads) * Dh + cfg.n_heads * Dh * D
+    if cfg.moe is not None:
+        m = cfg.moe
+        ffn_moe = 3 * D * m.d_expert * (m.top_k + m.n_shared)
+        Lm = L - m.moe_layer_start
+        ffn = (m.moe_layer_start * 3 * D * F + Lm * ffn_moe) / L
+    else:
+        ffn = 3 * D * F
+    return L * (attn + ffn) + 2 * V * D
+
+
+def kv_bytes_per_seq(cfg: ModelConfig, seq: int) -> float:
+    if cfg.family == "rwkv6":
+        H = cfg.d_model // cfg.rwkv.head_dim
+        return cfg.n_layers * (H * cfg.rwkv.head_dim**2 * 4 + 2 * cfg.d_model * BYTES_PER_EL)
+    if cfg.family == "zamba2":
+        n_slots = max(cfg.n_layers // cfg.hybrid.shared_block_period, 1)
+        attn = 2 * n_slots * seq * cfg.n_kv_heads * (2 * cfg.d_model // cfg.n_heads) * BYTES_PER_EL
+        d_inner = cfg.ssm.expand * cfg.d_model
+        ssm = cfg.n_layers * (d_inner // cfg.ssm.d_head) * cfg.ssm.d_head * cfg.ssm.d_state * 4
+        return attn + ssm
+    if cfg.mla is not None:
+        return cfg.n_layers * seq * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim) * BYTES_PER_EL
+    return 2 * cfg.n_layers * seq * cfg.n_kv_heads * cfg.resolved_head_dim() * BYTES_PER_EL
+
+
+def plan(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    axes: dict[str, int],
+    dev: Device = DEVICES["TPU-V5E"],
+) -> Plan:
+    """Pick kv policy + sub-batch count for a decode shape on a mesh."""
+    B, S = shape.global_batch, shape.seq_len
+    n_chips = lanes(axes)
+
+    # shards the cache spans under each policy (via the same resolver the
+    # models use, so the plan matches what actually lowers)
+    def shards(policy: str) -> int:
+        rules = kv_rules(policy)
+        if cfg.mla is not None:  # latent cache has no head axis
+            logical = ("kv_batch", "kv_seq", None)
+            dims = (B, S, cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim)
+        elif cfg.family == "rwkv6":  # state cache: (B, H, N, N)
+            logical = ("kv_batch", "state", None, None)
+            H = cfg.d_model // cfg.rwkv.head_dim
+            dims = (B, H, cfg.rwkv.head_dim, cfg.rwkv.head_dim)
+        else:
+            logical = ("kv_batch", "kv_seq", "kv_heads", "head_dim")
+            dims = (B, S, max(cfg.n_kv_heads, 1), cfg.resolved_head_dim())
+        spec = resolve_spec(logical, rules, axes, dims)
+        n = 1
+        for part in spec:
+            if part is None:
+                continue
+            for ax in (part if isinstance(part, tuple) else (part,)):
+                n *= axes[ax]
+        return n
+
+    candidates = {}
+    for policy in ("batch", "head", "sequence", "batch_seq"):
+        n = shards(policy)
+        kv_by = kv_bytes_per_seq(cfg, S) * B
+        t_attn = kv_by / (n * dev.bw)
+        candidates[policy] = (t_attn, n)
+    # paper Fig. 4: prefer batch over head on merge cost when tied
+    order = {"batch": 0, "batch_seq": 1, "sequence": 2, "head": 3}
+    best = min(candidates, key=lambda p: (candidates[p][0], order[p]))
+    t_attn, n_shards = candidates[best]
+
+    t_linear = 2 * _active_params(cfg) * B / (n_chips * dev.flops)
+    t_linear = max(
+        t_linear, _active_params(cfg) * BYTES_PER_EL / (n_chips * dev.bw)
+    )
+    # boundary: per-token q/k/v + output vectors over ICI
+    Dh = cfg.resolved_head_dim()
+    bound = cfg.n_layers * B * (2 * cfg.n_heads + 2 * cfg.n_kv_heads) * Dh * BYTES_PER_EL
+    t_bound = bound / (n_chips * dev.net)
+
+    sub = 2 if min(t_linear, t_attn) > 0.2 * max(t_linear, t_attn) else 1
+    bottleneck = "attention" if t_attn >= t_linear else "linear"
+    return Plan(best, sub, t_linear, t_attn, t_bound, bottleneck, n_shards)

@@ -1,0 +1,145 @@
+"""Disaggregated ("offloaded") decode attention — the paper's core mechanism.
+
+The GPU↔HPU split becomes a *layout* split on the TPU mesh:
+
+  compute side   activations sharded [batch -> (pod,data), heads -> model]
+                 (linear layers are TP over `model`, DP over `data`)
+  HPU side       KV cache + attention sharded per a placement policy
+                 (``repro.core.placement``), maximizing the aggregate HBM
+                 bandwidth serving the memory-bound GEMV-shaped attention.
+
+The boundary resharding of per-token Q (and the freshly produced K/V) is
+the analogue of the paper's PCIe Q/K/V descriptor transfer: a few
+``batch*heads*head_dim`` vectors per layer per step, negligible next to
+the KV cache itself.  We emit it as ``with_sharding_constraint`` and let
+GSPMD schedule the all-to-all; the big cache is *already resident* in the
+HPU layout (its in_sharding comes from ``cache_specs``), so no bulk data
+moves — exactly the paper's design point.
+
+``offload="none"`` runs everything in the compute layout (the GPU-only
+baseline of the paper's evaluation).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.placement import Env
+from repro.models import attention as attn
+
+
+def _wsc(x: jax.Array, spec: P) -> jax.Array:
+    if spec == P() or not spec:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_cache(env: Env, k_cache: jax.Array, v_cache: jax.Array):
+    """Pin caches to the policy layout (idempotent when already resident)."""
+    if not env.axes:
+        return k_cache, v_cache
+    spec = env.kv_spec(("kv_batch", "kv_seq", "kv_heads", "head_dim"), k_cache.shape)
+    return _wsc(k_cache, spec), _wsc(v_cache, spec)
+
+
+def decode_attention(
+    env: Env,
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """One decode step of attention, routed through the HPU layout.
+
+    q (B, Hq, D); caches (B, S, Hkv, D); lengths (B,) -> (B, Hq, D).
+    """
+    if env.axes and env.offload == "hpu":
+        # --- boundary transfer (PCIe analogue): per-token Q to HPU layout
+        q = _wsc(q, env.kv_spec(("kv_batch", "kv_heads", "head_dim"), q.shape))
+        k_cache, v_cache = constrain_cache(env, k_cache, v_cache)
+    acc = jnp.bfloat16 if env.bf16_combine else jnp.float32
+    if env.use_pallas:
+        from repro.kernels import ops
+
+        out = ops.decode_attention(q, k_cache, v_cache, lengths, scale=scale)
+    else:
+        out = attn.decode_attention(
+            q, k_cache, v_cache, lengths, scale=scale, acc_dtype=acc
+        )
+    if env.axes and env.offload == "hpu":
+        # --- gather results back to the compute layout (contiguous merge;
+        # the paper's preferred batch-parallel merge order)
+        out = _wsc(out, env.act_spec(("batch", "heads", "head_dim"), out.shape))
+    return out
+
+
+def mla_decode_attention(
+    env: Env,
+    q_latent: jax.Array,
+    q_rope: jax.Array,
+    ckv_cache: jax.Array,
+    krope_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float,
+) -> jax.Array:
+    """MLA absorbed decode through the HPU layout (cache = compressed latent).
+
+    The latent cache has no head axis, so the `head` policy degrades to
+    `sequence` automatically (resolve_spec drops non-existent axes).
+    """
+    if env.axes and env.offload == "hpu":
+        q_latent = _wsc(
+            q_latent, env.kv_spec(("kv_batch", "kv_heads", None), q_latent.shape)
+        )
+        q_rope = _wsc(q_rope, env.kv_spec(("kv_batch", "kv_heads", None), q_rope.shape))
+        cspec = env.kv_spec(("kv_batch", "kv_seq", None), ckv_cache.shape)
+        ckv_cache = _wsc(ckv_cache, cspec)
+        krope_cache = _wsc(
+            krope_cache, env.kv_spec(("kv_batch", "kv_seq", None), krope_cache.shape)
+        )
+    out = attn.mla_decode_attention(
+        q_latent, q_rope, ckv_cache, krope_cache, lengths, scale=scale,
+        acc_dtype=jnp.bfloat16 if env.bf16_combine else jnp.float32,
+    )
+    if env.axes and env.offload == "hpu":
+        out = _wsc(out, env.act_spec(("batch", "heads", None), out.shape))
+    return out
+
+
+def prefill_attention(
+    env: Env,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_offset=0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Prefill/train attention (compute-side; flash-chunked).
+
+    With ``env.sequence_parallel`` the q/output sequence axis is sharded
+    over `model` (context parallelism): the rule set gives `seq -> model`
+    and GSPMD partitions the global attention math, all-gathering the much
+    smaller K/V instead of replicating the O(S^2) compute.  This is how
+    archs whose head count does not divide the model axis (yi-34b 56H,
+    minicpm 36H, llama3.2-3b 24H on a 16-way axis) avoid 16x redundant
+    attention FLOPs.
+    """
+    if env.axes:
+        spec = env.act_spec(("batch", "seq", "heads", "head_dim"), q.shape)
+        q = _wsc(q, spec)
+    if env.use_pallas:
+        from repro.kernels import ops
+
+        out = ops.flash_attention(q, k, v, causal=True)
+    else:
+        out = attn.chunked_attention(q, k, v, causal=True, q_offset=q_offset, chunk=chunk)
+    if env.axes:
+        out = _wsc(out, env.act_spec(("batch", "seq", "heads", "head_dim"), out.shape))
+    return out

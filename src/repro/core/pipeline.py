@@ -1,0 +1,88 @@
+"""Sub-batch pipelining (paper Fig. 3) as JAX program structure.
+
+The paper staggers sub-batches so the HPU computes attention for sub-batch
+*i* while the GPU runs linear layers for sub-batch *j*.  Under XLA there
+are no explicit command queues; instead we split the batch into
+``n_sub`` *data-independent* step computations.  Because the sub-batches
+share no activations, XLA's latency-hiding scheduler is free to overlap
+the HPU-layout collectives (the boundary "transfers") and attention of one
+sub-batch with the FFN GEMMs of another — the same pipeline, expressed as
+available instruction-level parallelism instead of device queues.
+
+``pipelined_step`` is the generic wrapper used by the serving engine and
+the dry-run when ``parallel.sub_batches > 1``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _nbatch(tree: Pytree) -> int:
+    leaves = [l for l in jax.tree.leaves(tree) if hasattr(l, "shape") and l.ndim]
+    return leaves[0].shape[0]
+
+
+def tree_split(tree: Pytree, n_sub: int, axis: int = 0) -> list[Pytree]:
+    """Split every leaf along ``axis`` into n_sub equal parts."""
+
+    def split_leaf(leaf):
+        return jnp.split(leaf, n_sub, axis=axis)
+
+    parts = jax.tree.map(split_leaf, tree)
+    return [jax.tree.map(lambda p, i=i: p[i], parts, is_leaf=lambda x: isinstance(x, list)) for i in range(n_sub)]
+
+
+def tree_concat(trees: list[Pytree], axis: int = 0) -> Pytree:
+    return jax.tree.map(lambda *ls: jnp.concatenate(ls, axis=axis), *trees)
+
+
+def split_cache(cache: Pytree, n_sub: int, batch_axes: dict[str, int]) -> list[Pytree]:
+    """Split a cache pytree on each leaf's batch axis (leaf-name -> axis)."""
+    subs: list[dict] = [dict() for _ in range(n_sub)]
+    for k, v in cache.items():
+        ax = batch_axes.get(k, 1)  # stacked-layer caches carry batch at 1
+        parts = jnp.split(v, n_sub, axis=ax)
+        for i in range(n_sub):
+            subs[i][k] = parts[i]
+    return subs
+
+
+def merge_cache(subs: list[Pytree], batch_axes: dict[str, int]) -> Pytree:
+    out = {}
+    for k in subs[0]:
+        ax = batch_axes.get(k, 1)
+        out[k] = jnp.concatenate([s[k] for s in subs], axis=ax)
+    return out
+
+
+def default_batch_axes(cache: Pytree) -> dict[str, int]:
+    """lengths is (B,); stacked per-layer caches are (L, B, ...)."""
+    return {k: (0 if k == "lengths" else 1) for k in cache}
+
+
+def pipelined_step(
+    decode_fn: Callable[[Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]],
+    n_sub: int,
+) -> Callable[[Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]]:
+    """Wrap a decode step so it runs as ``n_sub`` staggered sub-batches."""
+    if n_sub <= 1:
+        return decode_fn
+
+    def step(params, cache, tokens):
+        axes = default_batch_axes(cache)
+        cache_subs = split_cache(cache, n_sub, axes)
+        token_subs = jnp.split(tokens, n_sub, axis=0)
+        outs = []
+        new_caches = []
+        for c, t in zip(cache_subs, token_subs):
+            logits, nc = decode_fn(params, c, t)
+            outs.append(logits)
+            new_caches.append(nc)
+        return jnp.concatenate(outs, 0), merge_cache(new_caches, axes)
+
+    return step

@@ -1,0 +1,88 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles layout conversion (model layout <-> kernel layout), GQA group
+packing, shape padding to hardware-aligned blocks, and the CPU interpret
+fallback (``interpret=True`` executes the identical kernel body on CPU,
+which is how the kernels are validated in this container).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.prefill_attention import flash_attention_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_s"))
+def decode_attention(
+    q: jax.Array,        # (B, Hq, D) — model layout
+    k_cache: jax.Array,  # (B, S, Hkv, D)
+    v_cache: jax.Array,  # (B, S, Hkv, D)
+    lengths: jax.Array,  # (B,)
+    scale: float | None = None,
+    block_s: int = 512,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    qk = q.reshape(B, Hkv, G, D)                    # pack GQA group
+    kk = jnp.swapaxes(k_cache, 1, 2)                # (B, Hkv, S, D)
+    vk = jnp.swapaxes(v_cache, 1, 2)
+    block = min(block_s, S)
+    kk = _pad_to(kk, 2, block)
+    vk = _pad_to(vk, 2, block)
+
+    out = decode_attention_pallas(
+        qk, kk, vk, lengths.astype(jnp.int32),
+        scale=scale, block_s=block, interpret=_interpret(),
+    )
+    return out.reshape(B, Hq, D)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q", "block_k"))
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D) — model layout
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,  # (B, Sk, Hkv, D)
+    scale: float | None = None,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qk = jnp.swapaxes(q, 1, 2)  # (B, Hq, Sq, D)
+    kk = jnp.swapaxes(k, 1, 2)
+    vk = jnp.swapaxes(v, 1, 2)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    while Sq % bq:
+        bq //= 2
+    while Sk % bk:
+        bk //= 2
+    out = flash_attention_pallas(
+        qk, kk, vk, scale=scale, causal=causal,
+        block_q=max(bq, 1), block_k=max(bk, 1), interpret=_interpret(),
+    )
+    return jnp.swapaxes(out, 1, 2)

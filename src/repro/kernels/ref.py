@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (naive, O(S^2) memory)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def naive_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D) -> (B,Sq,Hq,Dv).  fp32 softmax."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Sq, Hq, vf.shape[-1]).astype(q.dtype)
+
+
+def naive_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """q (B,Hq,D), caches (B,S,Hkv,D), lengths (B,) -> (B,Hq,D)."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kf) * scale
+    mask = jnp.arange(S)[None] < lengths[:, None]  # (B,S)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, vf)
+    return o.reshape(B, Hq, vf.shape[-1]).astype(q.dtype)

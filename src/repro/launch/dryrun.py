@@ -1,0 +1,317 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the production mesh is built from 512 placeholder host
+devices (the two lines above MUST precede any jax import), the full-size
+model is lowered against ShapeDtypeStruct inputs (no allocation), compiled,
+and the artifact is analyzed:
+
+  * ``compiled.memory_analysis()``  -> bytes/device (proves it fits)
+  * ``compiled.cost_analysis()``    -> XLA's per-device FLOPs/bytes
+  * ``analysis.hlo_cost``           -> trip-count-corrected FLOPs/bytes +
+                                       collective bytes by kind
+  * ``analysis.roofline``           -> the three roofline terms
+
+Results are written as one JSON per cell under --out (resumable).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape decode_32k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import hlo_cost
+from repro.analysis.roofline import model_flops, roofline
+from repro.configs import SHAPES, all_arch_ids, get_config, shapes_for
+from repro.configs.base import ParallelConfig, RunConfig, TrainConfig
+from repro.core import balance
+from repro.core.pipeline import pipelined_step
+from repro.core.placement import Env
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.models.registry import build_model
+from repro.training.trainer import make_train_step
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def build_env(cfg, shape, axes, args) -> Env:
+    if shape.kind == "decode" and args.offload != "none":
+        kv_policy = args.kv_policy or balance.plan(cfg, shape, axes).kv_policy
+    else:
+        kv_policy = args.kv_policy or "batch"
+    # auto context-parallelism when q heads don't divide the model axis
+    # (otherwise attention compute would replicate across `model`)
+    seq_par = args.sequence_parallel
+    if shape.kind in ("train", "prefill") and cfg.n_heads % axes.get("model", 1):
+        seq_par = True
+    return Env(
+        axes=axes,
+        kv_policy=kv_policy,
+        offload=args.offload,
+        sub_batches=args.sub_batches,
+        sequence_parallel=seq_par,
+        fsdp=(shape.kind == "train" and not args.no_fsdp),
+        # inference of big MoE: DeepSeek-style wide EP (experts over all
+        # chips) — weights would otherwise replicate over `data`
+        ep_wide=(shape.kind != "train" and cfg.moe is not None
+                 and args.offload == "hpu"),
+        bf16_combine=args.bf16_combine,
+        moe_a2a=args.moe_a2a,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, args):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh_axes(mesh)
+    cfg = get_config(arch)
+    if args.kv_quant and cfg.family == "dense":
+        cfg = cfg.with_overrides(kv_quant=True)
+    shape = SHAPES[shape_name]
+    env = build_env(cfg, shape, axes, args)
+    model = build_model(cfg, env)
+
+    t0 = time.time()
+    train_accum = 0
+    if shape.kind == "train":
+        accum = args.grad_accum
+        if accum <= 0:
+            # auto: keep per-device layer-boundary activations ~<= 6 GB
+            # (remat stores one (B_micro/dev, S, D) tensor per layer)
+            dp = axes.get("pod", 1) * axes.get("data", 1)
+            b_dev = max(shape.global_batch // dp, 1)
+            act = cfg.n_layers * b_dev * shape.seq_len * cfg.d_model * 2
+            accum = 1
+            while act / accum > 3e9 and accum < b_dev:
+                accum *= 2
+        train_accum = accum
+        run = RunConfig(
+            model=cfg,
+            parallel=ParallelConfig(
+                zero_stage=1,
+                grad_accum=accum,
+                grad_accum_dtype=args.grad_accum_dtype,
+                optimizer_dtype="float32" if model.n_params() < 5e10 else "bfloat16",
+            ),
+            train=TrainConfig(),
+        )
+        init_state, train_step, state_specs, state_shapes = make_train_step(model, run)
+        state_sds = state_shapes()
+        batch_sds = S.train_batch_specs(cfg, shape)
+        state_sh = named(mesh, state_specs())
+        batch_sh = S.batch_shardings(cfg, batch_sds, env, mesh)
+        with mesh:
+            metrics_shape = jax.eval_shape(train_step, state_sds, batch_sds)[1]
+            metrics_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), metrics_shape)
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, metrics_sh),
+                donate_argnums=(0,),
+            ).lower(state_sds, batch_sds)
+    elif shape.kind == "prefill":
+        tokens, cache, embeds = S.prefill_inputs(model, shape)
+        params_sh = named(mesh, model.param_specs())
+        cache_sh = S.cache_shardings(model, cache, mesh)
+        tok_sh = NamedSharding(mesh, env.act_spec(("batch", None), tokens.shape))
+        params_sds = model.param_shapes()
+        in_shard = [params_sh, tok_sh, cache_sh]
+        lower_args = [params_sds, tokens, cache]
+        fn = model.prefill
+        if embeds is not None:
+            emb_sh = NamedSharding(mesh, env.act_spec(("batch", None, None), embeds.shape))
+            in_shard.append(emb_sh)
+            lower_args.append(embeds)
+            fn = lambda p, t, c, e: model.prefill(p, t, c, embeds=e)
+        logits_sh = NamedSharding(
+            mesh, env.act_spec(("batch", "vocab"), (shape.global_batch, cfg.padded_vocab()))
+        )
+        with mesh:
+            lowered = jax.jit(
+                fn,
+                in_shardings=tuple(in_shard),
+                out_shardings=(logits_sh, cache_sh),
+                donate_argnums=(2,),
+            ).lower(*lower_args)
+    else:  # decode
+        cache, tokens = S.decode_inputs(model, shape)
+        params_sh = named(mesh, model.param_specs())
+        cache_sh = S.cache_shardings(model, cache, mesh)
+        tok_sh = NamedSharding(mesh, env.act_spec(("batch",), tokens.shape))
+        logits_sh = NamedSharding(
+            mesh, env.act_spec(("batch", "vocab"), (shape.global_batch, cfg.padded_vocab()))
+        )
+        params_sds = model.param_shapes()
+        step = pipelined_step(model.decode_step, env.sub_batches)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(params_sh, cache_sh, tok_sh),
+                out_shardings=(logits_sh, cache_sh),
+                donate_argnums=(1,),
+            ).lower(params_sds, cache, tokens)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    walker = hlo_cost.analyze(compiled.as_text())
+    n_chips = mesh.devices.size
+    rf = roofline(
+        cfg, shape, n_chips, walker.flops, walker.bytes,
+        dict(walker.coll_by_kind), n_params=model.n_params(),
+    )
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "env": {
+            "grad_accum": train_accum,
+            "ep_wide": env.ep_wide,
+            "kv_policy": env.kv_policy,
+            "offload": env.offload,
+            "sub_batches": env.sub_batches,
+            "sequence_parallel": env.sequence_parallel,
+            "fsdp": env.fsdp,
+        },
+        "n_params": model.n_params(),
+        "time_lower_s": round(t_lower, 2),
+        "time_compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "alias_bytes_per_dev": mem.alias_size_in_bytes,
+            "peak_bytes_per_dev": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "xla_cost": {
+            "flops_per_dev": ca.get("flops", -1.0),
+            "bytes_per_dev": ca.get("bytes accessed", -1.0),
+        },
+        "walker": {
+            "flops_per_dev": walker.flops,
+            "bytes_per_dev": walker.bytes,
+            "coll_bytes_per_dev": walker.coll_bytes,
+            "coll_by_kind": dict(walker.coll_by_kind),
+            "coll_count": walker.coll_count,
+        },
+        "roofline": rf.as_dict(),
+    }
+
+
+def cell_id(arch, shape, mesh_kind, args):
+    tag = ""
+    if args.kv_policy:
+        tag += f".kv_{args.kv_policy}"
+    if args.offload != "hpu":
+        tag += f".off_{args.offload}"
+    if args.sub_batches != 1:
+        tag += f".sub{args.sub_batches}"
+    if args.sequence_parallel:
+        tag += ".sp"
+    if args.bf16_combine:
+        tag += ".bfc"
+    if args.moe_a2a:
+        tag += ".a2a"
+    if args.no_fsdp:
+        tag += ".nofsdp"
+    if args.grad_accum_dtype != "float32":
+        tag += ".ga_bf16"
+    if args.kv_quant:
+        tag += ".kvq8"
+    if args.grad_accum > 0:
+        tag += f".ga{args.grad_accum}"
+    return f"{arch}.{shape}.{mesh_kind}{tag}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--kv-policy", dest="kv_policy", default=None,
+                    choices=[None, "batch", "head", "sequence", "batch_seq"])
+    ap.add_argument("--offload", default="hpu", choices=["hpu", "none"])
+    ap.add_argument("--sub-batches", dest="sub_batches", type=int, default=1)
+    ap.add_argument("--sequence-parallel", dest="sequence_parallel", action="store_true")
+    ap.add_argument("--bf16-combine", dest="bf16_combine", action="store_true")
+    ap.add_argument("--moe-a2a", dest="moe_a2a", action="store_true")
+    ap.add_argument("--no-fsdp", dest="no_fsdp", action="store_true")
+    ap.add_argument("--grad-accum-dtype", dest="grad_accum_dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--kv-quant", dest="kv_quant", action="store_true")
+    ap.add_argument("--grad-accum", dest="grad_accum", type=int, default=0)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = all_arch_ids() if (args.all or not args.arch) else [args.arch]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shape_names = (
+            [args.shape] if args.shape else [s.name for s in shapes_for(cfg)]
+        )
+        for shape_name in shape_names:
+            if shape_name == "long_500k" and not cfg.subquadratic:
+                print(f"SKIP {arch} x long_500k (full attention; DESIGN.md §4)")
+                continue
+            for mesh_kind in meshes:
+                cid = cell_id(arch, shape_name, mesh_kind, args)
+                path = os.path.join(args.out, cid + ".json")
+                if os.path.exists(path) and not args.force:
+                    n_skip += 1
+                    continue
+                print(f"=== {cid} ===", flush=True)
+                try:
+                    rec = lower_cell(arch, shape_name, mesh_kind == "multi", args)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(
+                        f"  ok  lower={rec['time_lower_s']}s compile={rec['time_compile_s']}s "
+                        f"peak/dev={rec['memory']['peak_bytes_per_dev']/2**30:.2f}GiB "
+                        f"bottleneck={r['bottleneck']} frac={r['roofline_frac']:.3f}",
+                        flush=True,
+                    )
+                    n_ok += 1
+                except Exception as e:
+                    n_fail += 1
+                    with open(path + ".err", "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"  FAIL {type(e).__name__}: {e}", flush=True)
+    print(f"done ok={n_ok} fail={n_fail} skip={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

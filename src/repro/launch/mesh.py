@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A function (NOT a module-level constant) so importing this module never
+touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init to obtain placeholder devices.
+
+Single pod: 16 x 16 = 256 chips (TPU v5e pod), axes (data, model).
+Multi-pod: 2 x 16 x 16 = 512 chips, axes (pod, data, model) — the `pod`
+axis carries only data parallelism (gradient all-reduce / batch sharding),
+matching DCN-connected pods.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host actually has (CPU tests / reduced runs)."""
+    n = jax.device_count()
+    mp = model_parallel if n % model_parallel == 0 else 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"), axis_types=_auto(2))
+
+
+def mesh_axes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape).
+
+``input_specs`` returns weak-type-correct, shardable stand-ins with *no*
+device allocation — the dry-run lowers against these.  Modality frontends
+are stubs per the brief: internvl2 gets (B, F, D) patch embeddings,
+seamless gets (B, F, D) frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.placement import Env
+from repro.models.registry import Model
+
+Pytree = Any
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "inputs": sds((B, S), jnp.int32),
+        "targets": sds((B, S), jnp.int32),
+        "mask": sds((B, S), jnp.float32),
+    }
+    if cfg.frontend == "patches":
+        out["embeds"] = sds((B, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["src_embeds"] = sds((B, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, shape_names: dict[str, Any], env: Env, mesh) -> Pytree:
+    """Everything in a data batch shards on its leading (batch) axis."""
+
+    def spec_for(s):
+        logical = ("batch",) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(mesh, env.act_spec(logical, s.shape))
+
+    return jax.tree.map(spec_for, shape_names)
+
+
+def prefill_inputs(model: Model, shape: ShapeConfig):
+    """(tokens, cache, embeds?) stand-ins for a prefill lowering."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    n_front = cfg.frontend_len if cfg.frontend == "patches" else 0
+    tokens = sds((B, S - n_front if n_front else S), jnp.int32)
+    cache = model.cache_shapes(B, S)
+    embeds = None
+    if cfg.frontend == "patches":
+        embeds = sds((B, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        embeds = sds((B, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+    return tokens, cache, embeds
+
+
+def decode_inputs(model: Model, shape: ShapeConfig):
+    """(cache, tokens) stand-ins for one serve_step with a full KV cache."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = model.cache_shapes(B, S)
+    tokens = sds((B,), jnp.int32)
+    return cache, tokens
+
+
+def cache_shardings(model: Model, cache_shapes: Pytree, mesh) -> Pytree:
+    specs = model.cache_specs(1, 1)  # structure-only; resolve per-leaf below
+    # cache_specs mirrors cache_defs structure; recompute with real shapes
+    from repro.core.placement import kv_rules
+    from repro.models import common as cm
+
+    policy = model.env.kv_policy if model.env.offload == "hpu" else "none"
+    # rebuild defs at the real shapes by matching keys
+    def leaf_spec(defn):
+        return NamedSharding(
+            mesh,
+            cm.resolve_spec(defn.logical, kv_rules(policy), model.env.axes, defn.shape),
+        )
+
+    return jax.tree.map(
+        leaf_spec,
+        model.cache_defs(*_cache_dims(cache_shapes)),
+        is_leaf=cm.is_def,
+    )
+
+
+def _cache_dims(cache_shapes: Pytree) -> tuple[int, int]:
+    B = cache_shapes["lengths"].shape[0]
+    seq = 0
+    for k, v in cache_shapes.items():
+        if k in ("k", "v", "ckv", "krope") and v.ndim >= 3:
+            seq = max(seq, v.shape[2])
+    return B, seq

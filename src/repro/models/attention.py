@@ -1,0 +1,180 @@
+"""Attention compute paths (pure jnp, chunked/flash-style).
+
+These are the mathematically-exact CPU/dry-run implementations; the Pallas
+kernels in ``repro.kernels`` implement the same contracts for TPU and are
+validated against ``repro.kernels.ref`` (which in turn matches these).
+
+Shapes:
+  q        (B, Sq, Hq, D)
+  k, v     (B, Sk, Hkv, D)        Hq % Hkv == 0 (GQA group G = Hq // Hkv)
+  output   (B, Sq, Hq, D)
+
+Decode: Sq == 1, caches carry per-sequence valid ``lengths``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _pick_chunk(sk: int, want: int) -> int:
+    c = min(want, sk)
+    while sk % c:
+        c -= 1
+    return max(c, 1)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,
+    kv_lengths: jax.Array | None = None,
+    chunk: int = 1024,
+    scale: float | None = None,
+) -> jax.Array:
+    """Online-softmax attention, O(chunk) memory in Sk, fp32 accumulation.
+
+    ``q_offset``: absolute position of q[:, 0] (scalar or (B,)) so causal
+    masking works for prefill continuation and decode.
+    ``kv_lengths``: (B,) number of valid KV entries (mask the rest).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    Dv = v.shape[-1]  # may differ from D (MLA absorbed decode)
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    chunk = _pick_chunk(Sk, chunk)
+    n_chunks = Sk // chunk
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D) * scale
+    if isinstance(q_offset, int):
+        q_offset = jnp.full((B,), q_offset, jnp.int32)
+    q_pos = q_offset[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]  # (B,Sq)
+
+    kc = k.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, D)
+    vc = v.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, Dv)
+    kc = jnp.moveaxis(kc, 1, 0)  # (n, B, chunk, Hkv, D)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    m0 = jnp.full((B, Sq, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, Dv), jnp.float32)
+
+    def body(carry, inputs):
+        m, l, acc, j = carry[0], carry[1], carry[2], carry[3]
+        kj, vj = inputs
+        # scores: (B, Sq, Hkv, G, chunk)
+        s = jnp.einsum("bqhgd,bchd->bqhgc", qf, kj)
+        k_pos = j * chunk + jnp.arange(chunk, dtype=jnp.int32)  # (chunk,)
+        mask = jnp.ones((B, Sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, :, None] >= k_pos[None, None, :]
+        if kv_lengths is not None:
+            mask &= k_pos[None, None, :] < kv_lengths[:, None, None]
+        s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bqhgc,bchd->bqhgd", p, vj)
+        return (m_new, l, acc, j + 1), None
+
+    (m, l, acc, _), _ = jax.lax.scan(
+        body, (m0, l0, a0, jnp.int32(0)), (kc, vc), length=n_chunks
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """One-token attention vs a (possibly partially filled) KV cache.
+
+    q (B, Hq, D); caches (B, S, Hkv, D); lengths (B,).  The new token's K/V
+    must already be written into the cache at index lengths-1.
+
+    Deliberately UNCHUNKED (single einsum over the full S axis): the score
+    tensor for one query token is small, and keeping the cache's S axis
+    intact lets GSPMD shard it (sequence placement policy) with only
+    (B,H)-sized softmax reductions crossing chips — never the cache itself.
+    """
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    Dv = v_cache.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    # keep the cache in bf16 (no fp32 materialization — that would double
+    # the dominant HBM traffic); accumulate the dots in fp32 on the MXU
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache, preferred_element_type=jnp.float32)
+    mask = jnp.arange(S, dtype=jnp.int32)[None] < lengths[:, None]  # (B,S)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jax.lax.stop_gradient(m))
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum(
+        "bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=acc_dtype,
+    ).astype(jnp.float32)
+    o = o / jnp.maximum(l, 1e-30)
+    return o.reshape(B, Hq, Dv).astype(q.dtype)
+
+
+def mla_decode_attention(
+    q_latent: jax.Array,
+    q_rope: jax.Array,
+    ckv_cache: jax.Array,
+    krope_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """DeepSeek MLA absorbed decode.
+
+    q_latent (B, H, Dc): query projected into the compressed-kv latent space
+    (W_UK absorbed); q_rope (B, H, Dr): rope part; ckv_cache (B, S, Dc);
+    krope_cache (B, S, Dr); output (B, H, Dc) = attention-weighted latent
+    (caller applies absorbed W_UV / W_O).
+    """
+    B, H, Dc = q_latent.shape
+    S = ckv_cache.shape[1]
+    # unchunked on purpose (see decode_attention): scores are (B,H,S), the
+    # latent cache's S axis stays intact for the sequence placement policy;
+    # bf16 cache operands, fp32 accumulation (no fp32 cache copy)
+    s = jnp.einsum("bhr,bkr->bhk", q_latent.astype(ckv_cache.dtype), ckv_cache,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhr,bkr->bhk", q_rope.astype(krope_cache.dtype), krope_cache,
+                       preferred_element_type=jnp.float32)
+    s = s * scale
+    mask = jnp.arange(S, dtype=jnp.int32)[None] < lengths[:, None]
+    s = jnp.where(mask[:, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jax.lax.stop_gradient(m))
+    p = jnp.where(mask[:, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    # acc_dtype=bf16 halves the wire bytes of the cross-shard LSE combine
+    # when the cache's S axis is sharded (sequence policy) — §Perf iter. 2.
+    # The whole combine (incl. the division) stays in acc_dtype so the
+    # cross-shard reduction itself carries the narrow type.
+    out = jnp.einsum("bhk,bkr->bhr", p.astype(ckv_cache.dtype), ckv_cache,
+                     preferred_element_type=acc_dtype)
+    out = out / jnp.maximum(l, 1e-30).astype(acc_dtype)
+    return out.astype(q_latent.dtype)  # (B, H, Dc)

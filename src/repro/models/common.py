@@ -1,0 +1,298 @@
+"""Shared layers + parameter/spec machinery (pure JAX, no flax).
+
+Parameters are nested dicts of jnp arrays.  Every family module defines its
+parameter tree once as a tree of :class:`ParamDef` (shape + logical axes +
+init); ``init_params`` samples it and ``logical_specs`` extracts the
+logical-axis tree, so shapes and shardings can never diverge.
+
+Logical axes (resolved to mesh axes by ``repro.core.placement``):
+  "layers"      stacked scan dimension (never sharded)
+  "embed"       d_model
+  "vocab"       vocabulary
+  "heads"       query heads
+  "kv_heads"    kv heads
+  "head_dim"    per-head dim
+  "mlp"         FFN hidden
+  "experts"     MoE expert dimension
+  "batch"/"seq" activations only
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# dtype policy
+# ---------------------------------------------------------------------------
+def param_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"        # normal | zeros | ones | small | embed
+    scale: float | None = None  # override fan-in scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _sample(defn: ParamDef, rng: jax.Array, dtype) -> jax.Array:
+    if defn.init == "zeros":
+        return jnp.zeros(defn.shape, dtype)
+    if defn.init == "ones":
+        return jnp.ones(defn.shape, dtype)
+    # fan-in scaled normal; "embed" uses unit normal * 0.02 like GPT
+    if defn.init == "embed":
+        std = 0.02
+    elif defn.init == "small":
+        std = 1e-4
+    else:
+        fan_in = defn.shape[-2] if len(defn.shape) >= 2 else defn.shape[-1]
+        std = defn.scale if defn.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(rng, defn.shape, jnp.float32) * std).astype(dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(tree: Pytree, rng: jax.Array, dtype) -> Pytree:
+    """Sample every ParamDef leaf with an independent, path-derived key."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_sample(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def shape_tree(tree: Pytree, dtype) -> Pytree:
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), tree, is_leaf=is_def
+    )
+
+
+def logical_tree(tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda d: d.logical, tree, is_leaf=is_def)
+
+
+def count_params(tree: Pytree) -> int:
+    return sum(
+        math.prod(d.shape) for d in jax.tree.leaves(tree, is_leaf=is_def)
+    )
+
+
+# ---------------------------------------------------------------------------
+# logical -> physical spec resolution
+# ---------------------------------------------------------------------------
+# default rules; core.placement builds policy-specific variants.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "kv_batch": ("pod", "data"),
+    "kv_seq": (),
+    "embed": (),
+    "head_dim": (),
+    "seq": (),
+    "layers": (),
+    "state": (),
+}
+
+
+def resolve_spec(
+    logical: tuple[str | None, ...],
+    rules: dict[str, tuple[str, ...]],
+    mesh_axes: dict[str, int],
+    shape: tuple[int, ...] | None = None,
+) -> P:
+    """Map logical axes to a PartitionSpec.
+
+    Axes named in ``rules`` map to the mesh axes present in
+    ``mesh_axes``; unknown/None logical axes are unsharded.  pjit in/out
+    shardings require exact divisibility, so mesh axes that do not divide
+    the dim evenly are dropped (trailing-first).
+    """
+    parts: list[Any] = []
+    used: set[str] = set()  # a mesh axis may appear in at most one dim
+    for i, name in enumerate(logical):
+        if name is None or name not in rules:
+            parts.append(None)
+            continue
+        axes = tuple(a for a in rules[name] if a in mesh_axes and a not in used)
+        if not axes:
+            parts.append(None)
+            continue
+        if shape is not None:
+            dim = shape[i]
+            kept: list[str] = []
+            prod = 1
+            for a in axes:
+                if dim > 0 and dim % (prod * mesh_axes[a]) == 0:
+                    kept.append(a)
+                    prod *= mesh_axes[a]
+            axes = tuple(kept)
+            if not axes:
+                parts.append(None)
+                continue
+        used.update(axes)
+        parts.append(axes if len(axes) > 1 else axes[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _spec_axes(spec: P) -> set[str]:
+    used: set[str] = set()
+    for part in spec:
+        if part is None:
+            continue
+        for a in (part if isinstance(part, tuple) else (part,)):
+            used.add(a)
+    return used
+
+
+def resolve_param_spec(
+    defn: "ParamDef", rules: dict[str, tuple[str, ...]], mesh_axes: dict[str, int]
+) -> P:
+    """resolve_spec + row-parallel fallback for weights.
+
+    When a large weight loses its `model` sharding to divisibility (e.g.
+    yi-34b's 56 q-heads on a 16-way model axis), shard its embed/mlp/vocab
+    (contracting) dim over `model` instead — Megatron row-parallel; GSPMD
+    inserts the psum after the projection.  Replication of multi-GB
+    weights is never acceptable at scale.
+    """
+    spec = resolve_spec(defn.logical, rules, mesh_axes, defn.shape)
+    if "model" not in mesh_axes or math.prod(defn.shape) < (1 << 20):
+        return spec
+    if "model" in _spec_axes(spec):
+        return spec
+    parts = list(spec) + [None] * (len(defn.shape) - len(spec))
+    for i, name in enumerate(defn.logical):
+        if (
+            name in ("embed", "mlp", "vocab")
+            and parts[i] is None
+            and defn.shape[i] % mesh_axes["model"] == 0
+        ):
+            parts[i] = "model"
+            while parts and parts[-1] is None:
+                parts.pop()
+            return P(*parts)
+    return spec
+
+
+def specs_for(
+    defs: Pytree,
+    rules: dict[str, tuple[str, ...]],
+    mesh_axes: dict[str, int],
+    params: bool = False,
+) -> Pytree:
+    fn = resolve_param_spec if params else (
+        lambda d, r, m: resolve_spec(d.logical, r, m, d.shape)
+    )
+    return jax.tree.map(lambda d: fn(d, rules, mesh_axes), defs, is_leaf=is_def)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# ---------------------------------------------------------------------------
+# core layers
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x32_1, x32_2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x32_1 * cos - x32_2 * sin, x32_2 * cos + x32_1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array, true_vocab: int | None = None) -> jax.Array:
+    """x: (..., d_model), table: (vocab_padded, d_model) -> logits.
+
+    When the table is padded beyond ``true_vocab`` the pad logits are set
+    to -inf (so sampling/CE can never select them)."""
+    logits = jnp.einsum("...d,vd->...v", x, table)
+    if true_vocab is not None and true_vocab < table.shape[0]:
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(iota < true_vocab, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def cross_entropy_loss(
+    logits: jax.Array, targets: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    """Mean next-token CE in fp32.  logits (B,S,V), targets (B,S).
+
+    Written to stay vocab-sharded under GSPMD: no take_along_axis (its
+    gather would all-gather the logits); the gold logit is extracted with
+    a fused iota-compare-select reduction, and max/logsumexp reduce over
+    the sharded vocab axis with scalar-sized all-reduces only.
+    """
+    V = logits.shape[-1]
+    logits32 = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits32, axis=-1, keepdims=True))
+    sumexp = jnp.sum(jnp.exp(logits32 - m), axis=-1)
+    logz = jnp.log(sumexp) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(
+        jnp.where(vocab_iota == targets[..., None], logits32, 0.0), axis=-1
+    )
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

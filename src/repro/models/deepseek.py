@@ -1,0 +1,343 @@
+"""DeepSeek-V3: Multi-head Latent Attention (MLA) + MoE + MTP.
+
+Train path uses the naive (expanded) MLA formulation; decode uses the
+*absorbed* formulation, where the cache holds only the compressed latent
+(kv_lora_rank) + shared rope key — the per-token cache is 576 values
+instead of 2*H*128 = 32768, which is precisely why MLA remains a
+memory-bound offload target at much higher batch (DESIGN.md §4).
+
+MTP (depth 1): one extra MLA block predicting token t+2 from
+[norm(h_t); norm(embed(tok_{t+1}))], sharing embedding and output head
+(loss weight 0.3, per the DeepSeek-V3 paper).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import offload
+from repro.core.placement import Env
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models.attention import chunked_attention
+from repro.models.common import ParamDef
+
+Pytree = Any
+
+MTP_WEIGHT = 0.3
+
+
+def _dims(cfg):
+    a = cfg.mla
+    d_qk = a.qk_nope_head_dim + a.qk_rope_head_dim
+    return a, d_qk
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def _mla_defs(cfg, L):
+    a, d_qk = _dims(cfg)
+    D, H = cfg.d_model, cfg.n_heads
+    return {
+        "ln1": ParamDef((L, D), ("layers", "embed"), "zeros"),
+        "w_dq": ParamDef((L, D, a.q_lora_rank), ("layers", "embed", None)),
+        "q_norm": ParamDef((L, a.q_lora_rank), ("layers", None), "zeros"),
+        "w_uq": ParamDef((L, a.q_lora_rank, H, d_qk), ("layers", None, "heads", "head_dim")),
+        "w_dkv": ParamDef((L, D, a.kv_lora_rank), ("layers", "embed", None)),
+        "kv_norm": ParamDef((L, a.kv_lora_rank), ("layers", None), "zeros"),
+        "w_krope": ParamDef((L, D, a.qk_rope_head_dim), ("layers", "embed", None)),
+        "w_uk": ParamDef((L, a.kv_lora_rank, H, a.qk_nope_head_dim), ("layers", None, "heads", "head_dim")),
+        "w_uv": ParamDef((L, a.kv_lora_rank, H, a.v_head_dim), ("layers", None, "heads", "head_dim")),
+        "wo": ParamDef((L, H, a.v_head_dim, D), ("layers", "heads", "head_dim", "embed")),
+        "ln2": ParamDef((L, D), ("layers", "embed"), "zeros"),
+    }
+
+
+def param_defs(cfg) -> Pytree:
+    m = cfg.moe
+    Ld, Lm = m.moe_layer_start, cfg.n_layers - m.moe_layer_start
+    D, V, F = cfg.d_model, cfg.padded_vocab(), cfg.d_ff
+    dense_blocks = {
+        **_mla_defs(cfg, Ld),
+        "w_gate": ParamDef((Ld, D, F), ("layers", "embed", "mlp")),
+        "w_up": ParamDef((Ld, D, F), ("layers", "embed", "mlp")),
+        "w_down": ParamDef((Ld, F, D), ("layers", "mlp", "embed")),
+    }
+    moe_blocks = {**_mla_defs(cfg, Lm), **moe_mod.moe_ffn_defs(cfg, Lm)}
+    defs: dict[str, Any] = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), "embed"),
+        "dense_blocks": dense_blocks,
+        "moe_blocks": moe_blocks,
+        "final_norm": ParamDef((D,), ("embed",), "zeros"),
+        "unembed": ParamDef((V, D), ("vocab", "embed"), "embed"),
+    }
+    if cfg.mtp_depth:
+        defs["mtp"] = {
+            "norm_h": ParamDef((D,), ("embed",), "zeros"),
+            "norm_e": ParamDef((D,), ("embed",), "zeros"),
+            "proj": ParamDef((2 * D, D), (None, "embed")),
+            "block": {
+                **_mla_defs(cfg, 1),
+                "w_gate": ParamDef((1, D, F), ("layers", "embed", "mlp")),
+                "w_up": ParamDef((1, D, F), ("layers", "embed", "mlp")),
+                "w_down": ParamDef((1, F, D), ("layers", "mlp", "embed")),
+            },
+            "final_norm": ParamDef((D,), ("embed",), "zeros"),
+        }
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# MLA attention
+# ---------------------------------------------------------------------------
+def _mla_train_attn(cfg, env: Env, p, x, positions):
+    """Naive (expanded) MLA for train/prefill.  Returns (attn_out, ckv, krope)."""
+    a, d_qk = _dims(cfg)
+    H = cfg.n_heads
+    h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    cq = cm.rmsnorm(jnp.einsum("bsd,dr->bsr", h, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])  # (B,S,H,d_qk)
+    q_nope, q_rope = q[..., : a.qk_nope_head_dim], q[..., a.qk_nope_head_dim :]
+    q_rope = cm.rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = cm.rmsnorm(jnp.einsum("bsd,dr->bsr", h, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+    krope = cm.rope(
+        jnp.einsum("bsd,dk->bsk", h, p["w_krope"])[:, :, None, :], positions, cfg.rope_theta
+    )  # (B,S,1,Dr)
+
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(krope, k_nope.shape[:3] + (a.qk_rope_head_dim,))], axis=-1)
+    o = chunked_attention(qf, kf, v, causal=True, scale=1.0 / math.sqrt(d_qk))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, ckv, krope[:, :, 0, :]
+
+
+def _mla_decode_attn(cfg, env: Env, p, x, ckv_cache, krope_cache, lengths):
+    """Absorbed MLA decode.  Returns (attn_out (B,D), ckv_cache, krope_cache)."""
+    a, d_qk = _dims(cfg)
+    B = x.shape[0]
+    pos = lengths[:, None]
+    bidx = jnp.arange(B)
+    h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    cq = cm.rmsnorm(jnp.einsum("bd,dr->br", h, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("br,rhk->bhk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., : a.qk_nope_head_dim], q[..., a.qk_nope_head_dim :]
+    q_rope = cm.rope(q_rope[:, None], pos, cfg.rope_theta)[:, 0]
+
+    ckv_t = cm.rmsnorm(jnp.einsum("bd,dr->br", h, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    krope_t = cm.rope(
+        jnp.einsum("bd,dk->bk", h, p["w_krope"])[:, None, None, :], pos, cfg.rope_theta
+    )[:, 0, 0]
+    ckv_cache = ckv_cache.at[bidx, lengths].set(ckv_t.astype(ckv_cache.dtype))
+    krope_cache = krope_cache.at[bidx, lengths].set(krope_t.astype(krope_cache.dtype))
+
+    q_latent = jnp.einsum("bhn,rhn->bhr", q_nope, p["w_uk"])  # absorb W_UK
+    out_latent = offload.mla_decode_attention(
+        env, q_latent, q_rope, ckv_cache, krope_cache, lengths + 1,
+        scale=1.0 / math.sqrt(d_qk),
+    )
+    v_out = jnp.einsum("bhr,rhn->bhn", out_latent.astype(jnp.float32), p["w_uv"].astype(jnp.float32))
+    out = jnp.einsum("bhn,hnd->bd", v_out, p["wo"].astype(jnp.float32)).astype(x.dtype)
+    return out, ckv_cache, krope_cache
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+def _block_train(cfg, env, p, x, positions, is_moe):
+    o, _, _ = _mla_train_attn(cfg, env, p, x, positions)
+    x = x + o
+    h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if is_moe:
+        B, S, D = h.shape
+        y, aux = moe_mod.moe_ffn(cfg, env, p, h.reshape(B * S, D))
+        x = x + y.reshape(B, S, D)
+    else:
+        x = x + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        aux = jnp.float32(0.0)
+    if env.axes:
+        x = jax.lax.with_sharding_constraint(
+            x, env.act_spec(("batch", "seq", "embed"), x.shape)
+        )
+    return x, aux
+
+
+def hidden_states(cfg, env: Env, params, tokens, embeds=None, remat: bool = True):
+    x = cm.embed_lookup(params["embed"], tokens)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    dense_blk = partial(_block_train, cfg, env, is_moe=False)
+    moe_blk = partial(_block_train, cfg, env, is_moe=True)
+    if remat:
+        dense_blk = jax.checkpoint(dense_blk, policy=jax.checkpoint_policies.nothing_saveable)
+        moe_blk = jax.checkpoint(moe_blk, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def dense_body(xc, p):
+        xc, _ = dense_blk(p, xc, positions)
+        return xc, None
+
+    def moe_body(carry, p):
+        xc, aux = carry
+        xc, a = moe_blk(p, xc, positions)
+        return (xc, aux + a), None
+
+    x, _ = jax.lax.scan(dense_body, x, params["dense_blocks"])
+    (x, aux), _ = jax.lax.scan(moe_body, (x, jnp.float32(0.0)), params["moe_blocks"])
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux / max(cfg.n_layers - cfg.moe.moe_layer_start, 1)
+
+
+def loss_fn(cfg, env: Env, params, batch):
+    hid, aux = hidden_states(cfg, env, params, batch["inputs"])
+    table = params["unembed"]
+    logits = cm.unembed(hid, table, cfg.vocab)
+    ce = cm.cross_entropy_loss(logits, batch["targets"], batch.get("mask"))
+    loss = ce + cfg.moe.router_aux_coef * aux
+    metrics = {"loss": loss, "ce": ce, "aux": aux}
+
+    if cfg.mtp_depth and "mtp" in params:
+        mp = params["mtp"]
+        inp, tgt = batch["inputs"], batch["targets"]
+        # combine h_t with embed(tok_{t+1}) == embed(targets[:, :-1]) for t<S-1
+        h_in = cm.rmsnorm(hid[:, :-1], mp["norm_h"], cfg.norm_eps)
+        e_in = cm.rmsnorm(
+            cm.embed_lookup(params["embed"], tgt[:, :-1]), mp["norm_e"], cfg.norm_eps
+        )
+        x = jnp.einsum("bsd,dk->bsk", jnp.concatenate([h_in, e_in], -1), mp["proj"])
+        B, S1 = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S1, dtype=jnp.int32)[None], (B, S1))
+
+        def mtp_body(xc, p):
+            xc, _ = _block_train(cfg, env, p, xc, positions, is_moe=False)
+            return xc, None
+
+        x, _ = jax.lax.scan(mtp_body, x, mp["block"])
+        x = cm.rmsnorm(x, mp["final_norm"], cfg.norm_eps)
+        mtp_logits = cm.unembed(x, table, cfg.vocab)
+        mask = batch.get("mask")
+        mtp_ce = cm.cross_entropy_loss(
+            mtp_logits, tgt[:, 1:], None if mask is None else mask[:, 1:]
+        )
+        loss = loss + MTP_WEIGHT * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# cache / prefill / decode
+# ---------------------------------------------------------------------------
+def cache_defs(cfg, batch: int, max_seq: int) -> Pytree:
+    a = cfg.mla
+    L = cfg.n_layers
+    return {
+        "ckv": ParamDef(
+            (L, batch, max_seq, a.kv_lora_rank),
+            ("layers", "kv_batch", "kv_seq", None),
+            "zeros",
+        ),
+        "krope": ParamDef(
+            (L, batch, max_seq, a.qk_rope_head_dim),
+            ("layers", "kv_batch", "kv_seq", None),
+            "zeros",
+        ),
+        "lengths": ParamDef((batch,), ("kv_batch",), "zeros"),
+    }
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Pytree:
+    defs = cache_defs(cfg, batch, max_seq)
+    return {
+        k: jnp.zeros(d.shape, jnp.int32 if k == "lengths" else dtype)
+        for k, d in defs.items()
+    }
+
+
+def _split_cache(cfg, cache):
+    Ld = cfg.moe.moe_layer_start
+    return (
+        {k: (v[:Ld] if k != "lengths" else v) for k, v in cache.items()},
+        {k: (v[Ld:] if k != "lengths" else v) for k, v in cache.items()},
+    )
+
+
+def prefill(cfg, env: Env, params, tokens, cache, embeds=None):
+    x = cm.embed_lookup(params["embed"], tokens)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    dcache, mcache = _split_cache(cfg, cache)
+
+    def body(is_moe):
+        def f(xc, xs):
+            p, ckv_l, kr_l = xs
+            o, ckv, krope = _mla_train_attn(cfg, env, p, xc, positions)
+            xc = xc + o
+            h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+            if is_moe:
+                y, _ = moe_mod.moe_ffn(cfg, env, p, h.reshape(B * S, -1))
+                xc = xc + y.reshape(B, S, -1)
+            else:
+                xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+            ckv_l = jax.lax.dynamic_update_slice(ckv_l, ckv.astype(ckv_l.dtype), (0, 0, 0))
+            kr_l = jax.lax.dynamic_update_slice(kr_l, krope.astype(kr_l.dtype), (0, 0, 0))
+            return xc, (ckv_l, kr_l)
+
+        return f
+
+    x, (cd, kd) = jax.lax.scan(
+        body(False), x, (params["dense_blocks"], dcache["ckv"], dcache["krope"])
+    )
+    x, (cmo, kmo) = jax.lax.scan(
+        body(True), x, (params["moe_blocks"], mcache["ckv"], mcache["krope"])
+    )
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x[:, -1], params["unembed"], cfg.vocab)
+    new_cache = {
+        "ckv": jnp.concatenate([cd, cmo], 0),
+        "krope": jnp.concatenate([kd, kmo], 0),
+        "lengths": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, new_cache
+
+
+def decode_step(cfg, env: Env, params, cache, tokens):
+    lengths = cache["lengths"]
+    x = cm.embed_lookup(params["embed"], tokens)
+    dcache, mcache = _split_cache(cfg, cache)
+
+    def body(is_moe):
+        def f(xc, xs):
+            p, ckv_l, kr_l = xs
+            o, ckv_l, kr_l = _mla_decode_attn(cfg, env, p, xc, ckv_l, kr_l, lengths)
+            xc = xc + o
+            h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+            if is_moe:
+                y, _ = moe_mod.moe_ffn(cfg, env, p, h)
+                xc = xc + y
+            else:
+                xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+            return xc, (ckv_l, kr_l)
+
+        return f
+
+    x, (cd, kd) = jax.lax.scan(
+        body(False), x, (params["dense_blocks"], dcache["ckv"], dcache["krope"])
+    )
+    x, (cmo, kmo) = jax.lax.scan(
+        body(True), x, (params["moe_blocks"], mcache["ckv"], mcache["krope"])
+    )
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x, params["unembed"], cfg.vocab)
+    new_cache = {
+        "ckv": jnp.concatenate([cd, cmo], 0),
+        "krope": jnp.concatenate([kd, kmo], 0),
+        "lengths": lengths + 1,
+    }
+    return logits, new_cache

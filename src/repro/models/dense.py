@@ -1,0 +1,317 @@
+"""Dense llama-family decoder LM (yi-34b, llama3.2-1b/3b, minicpm-2b,
+internvl2-76b backbone).
+
+Layers are *stacked* on a leading dim and iterated with ``lax.scan`` so
+60-80 layer models lower/compile quickly on the dry-run host.  The decode
+path routes attention through ``repro.core.offload`` (the paper's
+technique); train/prefill use chunked flash-style attention.
+
+Multimodal stub (internvl2): ``batch["embeds"]`` (B, F, d_model) patch
+embeddings are prepended to the token embeddings; the loss covers token
+positions only.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import offload
+from repro.core.placement import Env
+from repro.models import common as cm
+from repro.models.common import ParamDef
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def param_defs(cfg) -> Pytree:
+    L, D, V, F = cfg.n_layers, cfg.d_model, cfg.padded_vocab(), cfg.d_ff
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    defs: dict[str, Any] = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), "embed"),
+        "blocks": {
+            "ln1": ParamDef((L, D), ("layers", "embed"), "zeros"),
+            "wq": ParamDef((L, D, Hq, Dh), ("layers", "embed", "heads", "head_dim")),
+            "wk": ParamDef((L, D, Hkv, Dh), ("layers", "embed", "kv_heads", "head_dim")),
+            "wv": ParamDef((L, D, Hkv, Dh), ("layers", "embed", "kv_heads", "head_dim")),
+            "wo": ParamDef((L, Hq, Dh, D), ("layers", "heads", "head_dim", "embed")),
+            "ln2": ParamDef((L, D), ("layers", "embed"), "zeros"),
+            "w_gate": ParamDef((L, D, F), ("layers", "embed", "mlp")),
+            "w_up": ParamDef((L, D, F), ("layers", "embed", "mlp")),
+            "w_down": ParamDef((L, F, D), ("layers", "mlp", "embed")),
+        },
+        "final_norm": ParamDef((D,), ("embed",), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((V, D), ("vocab", "embed"), "embed")
+    return defs
+
+
+def _unembed_table(params):
+    return params.get("unembed", params["embed"])
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill shared block)
+# ---------------------------------------------------------------------------
+def _qkv(cfg, p, h):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    return q, k, v
+
+
+def _block_train(cfg, env: Env, p, x, positions, chunk=1024):
+    h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, h)
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+    o = offload.prefill_attention(env, q, k, v, chunk=chunk)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    # Megatron-style SP: only the attention section runs sequence-sharded;
+    # the FFN gathers the sequence (small activations) so its weights stay
+    # tensor-parallel over `model` — otherwise every chip computes with the
+    # FULL (D,F) weight and its gradient all-reduces over all chips
+    # (measured 2x ~1.6 TiB/chip per step on yi-34b; EXPERIMENTS.md §Perf).
+    if env.axes and env.sequence_parallel:
+        h = jax.lax.with_sharding_constraint(
+            h, env.act_spec(("batch", None, "embed"), h.shape)
+        )
+    ffn = cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    if env.axes:
+        ffn = jax.lax.with_sharding_constraint(
+            ffn, env.act_spec(("batch", "seq", "embed"), ffn.shape)
+        )
+        x = jax.lax.with_sharding_constraint(
+            x, env.act_spec(("batch", "seq", "embed"), x.shape)
+        )
+    x = x + ffn
+    return x
+
+
+def hidden_states(cfg, env: Env, params, tokens, embeds=None, remat: bool = True):
+    """Token (+ optional prepended frontend) embeddings -> final hidden."""
+    x = cm.embed_lookup(params["embed"], tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    block = partial(_block_train, cfg, env)
+    if remat:
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    def scan_body(xc, p_slice):
+        return block(p_slice, xc, positions), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["blocks"])
+    return cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg, env: Env, params, batch):
+    hid = hidden_states(cfg, env, params, batch["inputs"], batch.get("embeds"))
+    n_front = 0 if "embeds" not in batch else batch["embeds"].shape[1]
+    hid = hid[:, n_front:]
+    logits = cm.unembed(hid, _unembed_table(params), cfg.vocab)
+    if env.axes:
+        logits = jax.lax.with_sharding_constraint(
+            logits, env.act_spec(("batch", "seq", "vocab"), logits.shape)
+        )
+    loss = cm.cross_entropy_loss(logits, batch["targets"], batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+def cache_defs(cfg, batch: int, max_seq: int) -> Pytree:
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim()
+    kv = ParamDef(
+        (L, batch, max_seq, Hkv, Dh),
+        ("layers", "kv_batch", "kv_seq", "kv_heads", "head_dim"),
+        "zeros",
+    )
+    defs = {
+        "k": kv,
+        "v": kv,
+        "lengths": ParamDef((batch,), ("kv_batch",), "zeros"),
+    }
+    if cfg.kv_quant:
+        sc = ParamDef(
+            (L, batch, max_seq, Hkv),
+            ("layers", "kv_batch", "kv_seq", "kv_heads"),
+            "zeros",
+        )
+        defs["k_scale"] = sc
+        defs["v_scale"] = sc
+    return defs
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Pytree:
+    defs = cache_defs(cfg, batch, max_seq)
+    if cfg.kv_quant:
+        dt = {"k": jnp.int8, "v": jnp.int8, "k_scale": jnp.bfloat16,
+              "v_scale": jnp.bfloat16, "lengths": jnp.int32}
+        return {k: jnp.zeros(d.shape, dt[k]) for k, d in defs.items()}
+    return {
+        k: jnp.zeros(d.shape, dtype if k != "lengths" else jnp.int32)
+        for k, d in defs.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# int8 KV quantization (beyond-paper: 2x cache capacity — the paper's
+# scalability axis §VI-B — at ~1e-2 relative attention error)
+# ---------------------------------------------------------------------------
+def _kv_quantize(x: jax.Array):
+    """x (..., Dh) -> (int8 values, per-vector scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    # on TPU this convert-multiply fuses into the attention dot's operand
+    # read; the resident cache stays int8 (capacity win is in the args)
+    return (q.astype(jnp.bfloat16) * scale[..., None].astype(jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+def prefill(cfg, env: Env, params, tokens, cache, embeds=None):
+    """Fill the cache with S context tokens; return last-position logits.
+
+    With a frontend, the prepended embeds also occupy cache positions (the
+    KV cache covers the full multimodal prefix).
+    """
+    x = cm.embed_lookup(params["embed"], tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    quant = cfg.kv_quant
+
+    def scan_body(xc, xs):
+        if quant:
+            p, k_l, v_l, ks_l, vs_l = xs
+        else:
+            p, k_l, v_l = xs
+        h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, p, h)
+        q = cm.rope(q, positions, cfg.rope_theta)
+        k = cm.rope(k, positions, cfg.rope_theta)
+        o = offload.prefill_attention(env, q, k, v)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+        xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        if quant:
+            kq, ksc = _kv_quantize(k)
+            vq, vsc = _kv_quantize(v)
+            k_l = jax.lax.dynamic_update_slice(k_l, kq, (0, 0, 0, 0))
+            v_l = jax.lax.dynamic_update_slice(v_l, vq, (0, 0, 0, 0))
+            ks_l = jax.lax.dynamic_update_slice(ks_l, ksc, (0, 0, 0))
+            vs_l = jax.lax.dynamic_update_slice(vs_l, vsc, (0, 0, 0))
+            return xc, (k_l, v_l, ks_l, vs_l)
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, 0, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, 0, 0, 0))
+        if env.axes:
+            k_l, v_l = offload.constrain_cache(env, k_l, v_l)
+        return xc, (k_l, v_l)
+
+    if quant:
+        x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+            scan_body, x,
+            (params["blocks"], cache["k"], cache["v"], cache["k_scale"], cache["v_scale"]),
+        )
+    else:
+        x, (k_new, v_new) = jax.lax.scan(
+            scan_body, x, (params["blocks"], cache["k"], cache["v"])
+        )
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x[:, -1], _unembed_table(params), cfg.vocab)
+    new_cache = {
+        "k": k_new,
+        "v": v_new,
+        "lengths": jnp.full((B,), S, jnp.int32),
+    }
+    if quant:
+        new_cache["k_scale"] = ks_new
+        new_cache["v_scale"] = vs_new
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def decode_step(cfg, env: Env, params, cache, tokens):
+    """One autoregressive step.  tokens (B,) -> logits (B, V), updated cache."""
+    lengths = cache["lengths"]  # (B,) current counts; new token at index lengths
+    B = tokens.shape[0]
+    x = cm.embed_lookup(params["embed"], tokens)  # (B, D)
+    pos = lengths[:, None]  # (B, 1)
+    bidx = jnp.arange(B)
+
+    quant = cfg.kv_quant
+
+    def scan_body(xc, xs):
+        if quant:
+            p, k_l, v_l, ks_l, vs_l = xs
+        else:
+            p, k_l, v_l = xs
+        h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", h, p["wq"])
+        k = jnp.einsum("bd,dhk->bhk", h, p["wk"])
+        v = jnp.einsum("bd,dhk->bhk", h, p["wv"])
+        q = cm.rope(q[:, None], pos, cfg.rope_theta)[:, 0]
+        k = cm.rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+        if quant:
+            kq, ksc = _kv_quantize(k)
+            vq, vsc = _kv_quantize(v)
+            k_l = k_l.at[bidx, lengths].set(kq)
+            v_l = v_l.at[bidx, lengths].set(vq)
+            ks_l = ks_l.at[bidx, lengths].set(ksc)
+            vs_l = vs_l.at[bidx, lengths].set(vsc)
+            o = offload.decode_attention(
+                env, q, _kv_dequantize(k_l, ks_l), _kv_dequantize(v_l, vs_l),
+                lengths + 1,
+            )
+        else:
+            k_l = k_l.at[bidx, lengths].set(k.astype(k_l.dtype))
+            v_l = v_l.at[bidx, lengths].set(v.astype(v_l.dtype))
+            o = offload.decode_attention(env, q, k_l, v_l, lengths + 1)
+        xc = xc + jnp.einsum("bhk,hkd->bd", o, p["wo"])
+        h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+        xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        if quant:
+            return xc, (k_l, v_l, ks_l, vs_l)
+        return xc, (k_l, v_l)
+
+    if quant:
+        x, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+            scan_body, x,
+            (params["blocks"], cache["k"], cache["v"], cache["k_scale"], cache["v_scale"]),
+        )
+    else:
+        x, (k_new, v_new) = jax.lax.scan(
+            scan_body, x, (params["blocks"], cache["k"], cache["v"])
+        )
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x, _unembed_table(params), cfg.vocab)
+    new_cache = {"k": k_new, "v": v_new, "lengths": lengths + 1}
+    if quant:
+        new_cache["k_scale"] = ks_new
+        new_cache["v_scale"] = vs_new
+    return logits, new_cache

@@ -1,0 +1,276 @@
+"""Seamless-M4T backbone: speech encoder (stub frontend) + AR text decoder.
+
+The speech frontend is a stub per the brief: ``batch["src_embeds"]``
+(B, frontend_len, d_model) precomputed frame embeddings feed the encoder.
+The decoder has causal self-attention (cached, offloaded) and
+cross-attention whose KV is computed once at prefill — the write-once/
+read-every-step "ideal offload" case noted in DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import offload
+from repro.core.placement import Env
+from repro.models import common as cm
+from repro.models.attention import chunked_attention
+from repro.models.common import ParamDef
+
+Pytree = Any
+
+
+def _dims(cfg):
+    return cfg.d_model, cfg.n_heads, cfg.resolved_head_dim()
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def _attn(cfg, L, prefix=""):
+    D, H, Dh = _dims(cfg)
+    return {
+        prefix + "wq": ParamDef((L, D, H, Dh), ("layers", "embed", "heads", "head_dim")),
+        prefix + "wk": ParamDef((L, D, H, Dh), ("layers", "embed", "kv_heads", "head_dim")),
+        prefix + "wv": ParamDef((L, D, H, Dh), ("layers", "embed", "kv_heads", "head_dim")),
+        prefix + "wo": ParamDef((L, H, Dh, D), ("layers", "heads", "head_dim", "embed")),
+    }
+
+
+def _mlp(cfg, L):
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamDef((L, D, F), ("layers", "embed", "mlp")),
+        "w_up": ParamDef((L, D, F), ("layers", "embed", "mlp")),
+        "w_down": ParamDef((L, F, D), ("layers", "mlp", "embed")),
+    }
+
+
+def param_defs(cfg) -> Pytree:
+    D, V = cfg.d_model, cfg.padded_vocab()
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    enc = {
+        "ln1": ParamDef((Le, D), ("layers", "embed"), "zeros"),
+        **_attn(cfg, Le),
+        "ln2": ParamDef((Le, D), ("layers", "embed"), "zeros"),
+        **_mlp(cfg, Le),
+    }
+    dec = {
+        "ln1": ParamDef((Ld, D), ("layers", "embed"), "zeros"),
+        **_attn(cfg, Ld),
+        "lnx": ParamDef((Ld, D), ("layers", "embed"), "zeros"),
+        **_attn(cfg, Ld, prefix="x_"),
+        "ln2": ParamDef((Ld, D), ("layers", "embed"), "zeros"),
+        **_mlp(cfg, Ld),
+    }
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), "embed"),
+        "enc_blocks": enc,
+        "enc_norm": ParamDef((D,), ("embed",), "zeros"),
+        "dec_blocks": dec,
+        "final_norm": ParamDef((D,), ("embed",), "zeros"),
+        "unembed": ParamDef((V, D), ("vocab", "embed"), "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+def encode(cfg, env: Env, params, src_embeds, remat: bool = True):
+    """src_embeds (B, T, D) -> encoder hidden (B, T, D)."""
+    x = src_embeds.astype(cm.param_dtype(cfg))
+
+    def block(p, xc):
+        h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+        o = chunked_attention(q, k, v, causal=False)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+        return xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+
+    blk = jax.checkpoint(block, policy=jax.checkpoint_policies.nothing_saveable) if remat else block
+
+    def body(xc, p):
+        return blk(p, xc), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return cm.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder blocks
+# ---------------------------------------------------------------------------
+def _dec_block_train(cfg, env: Env, p, x, enc_out, positions):
+    h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+    o = offload.prefill_attention(env, q, k, v)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    # cross attention
+    h = cm.rmsnorm(x, p["lnx"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["x_wq"])
+    xk = jnp.einsum("btd,dhk->bthk", enc_out, p["x_wk"])
+    xv = jnp.einsum("btd,dhk->bthk", enc_out, p["x_wv"])
+    o = chunked_attention(q, xk, xv, causal=False)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, p["x_wo"])
+    h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    if env.axes:
+        x = jax.lax.with_sharding_constraint(
+            x, env.act_spec(("batch", "seq", "embed"), x.shape)
+        )
+    return x, (xk, xv)
+
+
+def loss_fn(cfg, env: Env, params, batch):
+    enc_out = encode(cfg, env, params, batch["src_embeds"])
+    x = cm.embed_lookup(params["embed"], batch["inputs"])
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    blk = jax.checkpoint(
+        partial(_dec_block_train, cfg, env),
+        policy=jax.checkpoint_policies.nothing_saveable,
+    )
+
+    def body(xc, p):
+        xc, _ = blk(p, xc, enc_out, positions)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x, params["unembed"], cfg.vocab)
+    loss = cm.cross_entropy_loss(logits, batch["targets"], batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# cache / prefill / decode
+# ---------------------------------------------------------------------------
+def cache_defs(cfg, batch: int, max_seq: int) -> Pytree:
+    D, H, Dh = _dims(cfg)
+    Ld, T = cfg.n_layers, cfg.frontend_len
+    kv_self = ParamDef(
+        (Ld, batch, max_seq, H, Dh),
+        ("layers", "kv_batch", "kv_seq", "kv_heads", "head_dim"),
+        "zeros",
+    )
+    kv_cross = ParamDef(
+        (Ld, batch, T, H, Dh),
+        ("layers", "kv_batch", "kv_seq", "kv_heads", "head_dim"),
+        "zeros",
+    )
+    return {
+        "k": kv_self,
+        "v": kv_self,
+        "xk": kv_cross,
+        "xv": kv_cross,
+        "lengths": ParamDef((batch,), ("kv_batch",), "zeros"),
+    }
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Pytree:
+    defs = cache_defs(cfg, batch, max_seq)
+    return {
+        k: jnp.zeros(d.shape, jnp.int32 if k == "lengths" else dtype)
+        for k, d in defs.items()
+    }
+
+
+def prefill(cfg, env: Env, params, tokens, cache, embeds=None):
+    """embeds = src frame embeddings (B, T, D).  Encodes, fills cross KV,
+    then prefills the decoder over ``tokens``."""
+    assert embeds is not None, "encdec prefill needs src_embeds"
+    enc_out = encode(cfg, env, params, embeds, remat=False)
+    x = cm.embed_lookup(params["embed"], tokens)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    dec = params["dec_blocks"]
+
+    def body2(xc, xs):
+        p, k_l, v_l, xk_l, xv_l = xs
+        h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+        q = cm.rope(q, positions, cfg.rope_theta)
+        k = cm.rope(k, positions, cfg.rope_theta)
+        o = offload.prefill_attention(env, q, k, v)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        h = cm.rmsnorm(xc, p["lnx"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h, p["x_wq"])
+        xk = jnp.einsum("btd,dhk->bthk", enc_out, p["x_wk"])
+        xv = jnp.einsum("btd,dhk->bthk", enc_out, p["x_wv"])
+        o = chunked_attention(qx, xk, xv, causal=False)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", o, p["x_wo"])
+        h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+        xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, 0, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, 0, 0, 0))
+        return xc, (k_l, v_l, xk.astype(xk_l.dtype), xv.astype(xv_l.dtype))
+
+    x, (k_n, v_n, xk_n, xv_n) = jax.lax.scan(
+        body2, x, (dec, cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x[:, -1], params["unembed"], cfg.vocab)
+    new_cache = {
+        "k": k_n,
+        "v": v_n,
+        "xk": xk_n,
+        "xv": xv_n,
+        "lengths": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, new_cache
+
+
+def decode_step(cfg, env: Env, params, cache, tokens):
+    lengths = cache["lengths"]
+    B = tokens.shape[0]
+    T = cache["xk"].shape[2]
+    x = cm.embed_lookup(params["embed"], tokens)
+    pos = lengths[:, None]
+    bidx = jnp.arange(B)
+    xT = jnp.full((B,), T, jnp.int32)
+
+    def body(xc, xs):
+        p, k_l, v_l, xk_l, xv_l = xs
+        h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", h, p["wq"])
+        k = jnp.einsum("bd,dhk->bhk", h, p["wk"])
+        v = jnp.einsum("bd,dhk->bhk", h, p["wv"])
+        q = cm.rope(q[:, None], pos, cfg.rope_theta)[:, 0]
+        k = cm.rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+        k_l = k_l.at[bidx, lengths].set(k.astype(k_l.dtype))
+        v_l = v_l.at[bidx, lengths].set(v.astype(v_l.dtype))
+        o = offload.decode_attention(env, q, k_l, v_l, lengths + 1)
+        xc = xc + jnp.einsum("bhk,hkd->bd", o, p["wo"])
+        h = cm.rmsnorm(xc, p["lnx"], cfg.norm_eps)
+        qx = jnp.einsum("bd,dhk->bhk", h, p["x_wq"])
+        o = offload.decode_attention(env, qx, xk_l, xv_l, xT)
+        xc = xc + jnp.einsum("bhk,hkd->bd", o, p["x_wo"])
+        h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+        xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        return xc, (k_l, v_l, xk_l, xv_l)
+
+    x, (k_n, v_n, xk_n, xv_n) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x, params["unembed"], cfg.vocab)
+    new_cache = {
+        "k": k_n,
+        "v": v_n,
+        "xk": xk_n,
+        "xv": xv_n,
+        "lengths": lengths + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,382 @@
+"""MoE FFN + the moonshot-v1-16b-a3b family (GQA attention + MoE layers).
+
+Router: top-k with softmax or sigmoid scoring (DeepSeek-V3 style), switch
+load-balance aux loss.  Dispatch is scatter-based (no (T,E,C) one-hot):
+tokens are scatter-added into per-expert capacity buffers, expert GEMMs run
+as one batched einsum (EP: `experts` sharded over `model`), and results
+gather back.  Overflow beyond capacity is dropped to a garbage row
+(capacity factor 1.25), the standard dropping formulation.
+
+Shared experts are a plain dense SwiGLU of width n_shared*d_expert.
+First ``moe_layer_start`` layers are dense with d_ff = cfg.d_ff.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import offload
+from repro.core.placement import Env
+from repro.models import common as cm
+from repro.models import dense
+from repro.models.common import ParamDef
+
+Pytree = Any
+
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def _attn_defs(cfg, L):
+    D, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    return {
+        "ln1": ParamDef((L, D), ("layers", "embed"), "zeros"),
+        "wq": ParamDef((L, D, Hq, Dh), ("layers", "embed", "heads", "head_dim")),
+        "wk": ParamDef((L, D, Hkv, Dh), ("layers", "embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((L, D, Hkv, Dh), ("layers", "embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((L, Hq, Dh, D), ("layers", "heads", "head_dim", "embed")),
+        "ln2": ParamDef((L, D), ("layers", "embed"), "zeros"),
+    }
+
+
+def moe_ffn_defs(cfg, L) -> Pytree:
+    m = cfg.moe
+    D, E, Fe = cfg.d_model, m.n_experts, m.d_expert
+    defs = {
+        "router": ParamDef((L, D, E), ("layers", "embed", None), "small"),
+        "we_gate": ParamDef((L, E, D, Fe), ("layers", "experts", "embed", None)),
+        "we_up": ParamDef((L, E, D, Fe), ("layers", "experts", "embed", None)),
+        "we_down": ParamDef((L, E, Fe, D), ("layers", "experts", None, "embed")),
+    }
+    if m.n_shared:
+        Fs = m.n_shared * Fe
+        defs.update(
+            ws_gate=ParamDef((L, D, Fs), ("layers", "embed", "mlp")),
+            ws_up=ParamDef((L, D, Fs), ("layers", "embed", "mlp")),
+            ws_down=ParamDef((L, Fs, D), ("layers", "mlp", "embed")),
+        )
+    return defs
+
+
+def param_defs(cfg) -> Pytree:
+    m = cfg.moe
+    L_dense, L_moe = m.moe_layer_start, cfg.n_layers - m.moe_layer_start
+    D, V, F = cfg.d_model, cfg.padded_vocab(), cfg.d_ff
+    dense_blocks = {
+        **_attn_defs(cfg, L_dense),
+        "w_gate": ParamDef((L_dense, D, F), ("layers", "embed", "mlp")),
+        "w_up": ParamDef((L_dense, D, F), ("layers", "embed", "mlp")),
+        "w_down": ParamDef((L_dense, F, D), ("layers", "mlp", "embed")),
+    }
+    moe_blocks = {**_attn_defs(cfg, L_moe), **moe_ffn_defs(cfg, L_moe)}
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), "embed"),
+        "dense_blocks": dense_blocks,
+        "moe_blocks": moe_blocks,
+        "final_norm": ParamDef((D,), ("embed",), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((V, D), ("vocab", "embed"), "embed")
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN compute
+# ---------------------------------------------------------------------------
+def router_scores(cfg, router_w, x):
+    """(T, D) -> (weights (T,K), idx (T,K), aux_loss scalar)."""
+    m = cfg.moe
+    logits = jnp.einsum(
+        "td,de->te", x.astype(jnp.float32), router_w.astype(jnp.float32)
+    )
+    if m.score_func == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(scores, m.top_k)
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+    # switch-style load-balance aux: E * sum_e f_e * P_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(topi, m.n_experts, dtype=jnp.float32)  # (T,K,E)
+    f = jnp.mean(jnp.sum(onehot, axis=1), axis=0)  # fraction routed per e
+    p = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(f * p) / m.top_k
+    return topw, topi, aux
+
+
+def _moe_dispatch_local(cfg, p, x):
+    """Dropping-MoE dispatch for one DP rank's tokens.  x (T_l, D)."""
+    m = cfg.moe
+    T, D = x.shape
+    E, K = m.n_experts, m.top_k
+    topw, topi, aux = router_scores(cfg, p["router"], x)
+
+    capacity = max(int(math.ceil(T * K / E * m.capacity_factor)), K)
+    e_flat = topi.reshape(-1)  # (M,) M = T*K
+    # position of each assignment within its expert (one-hot cumsum trick)
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # (M, E)
+    pos = (jnp.cumsum(oh, axis=0) * oh).sum(-1) - 1  # (M,)
+    dropped = pos >= capacity
+    pos_safe = jnp.where(dropped, capacity, pos)  # overflow -> garbage row
+
+    tok_idx = jnp.repeat(jnp.arange(T), K)  # (M,)
+    disp = jnp.zeros((E, capacity + 1, D), x.dtype)
+    disp = disp.at[e_flat, pos_safe].add(x[tok_idx])
+    return disp, (e_flat, pos_safe, dropped, tok_idx, topw), aux
+
+
+def _moe_combine_local(cfg, out_e, meta, T, D):
+    e_flat, pos_safe, dropped, tok_idx, topw = meta
+    gathered = out_e[e_flat, pos_safe]  # (M, D)
+    gathered = jnp.where(dropped[:, None], 0.0, gathered)
+    w_flat = topw.reshape(-1).astype(gathered.dtype)
+    return jnp.zeros((T, D), gathered.dtype).at[tok_idx].add(
+        gathered * w_flat[:, None]
+    )
+
+
+def moe_ffn(cfg, env: Env, p, x):
+    """x (T, D) -> (T, D), aux_loss.  p: per-layer slice of moe_ffn_defs.
+
+    Dispatch is computed *per data-parallel rank* (vmap over a leading DP
+    axis sharded on `data`): positions/capacity are rank-local, so no
+    cross-rank cumsum, and the dispatch buffer is sharded over BOTH data
+    (capacity) and model (experts) — the standard EP x DP decomposition.
+    The token->expert exchange shows up as the expected all-to-all on the
+    (dp, E) -> (E-shard) boundary.
+    """
+    m = cfg.moe
+    T, D = x.shape
+    dp = 1
+    if env.axes and (not env.ep_wide or env.moe_a2a):
+        # rank-local dispatch; with ep_wide (experts over data x model) the
+        # dispatch must be global (dp=1) or use the a2a flip — a dp-sharded
+        # dispatch against 256-way expert weights makes GSPMD all-gather
+        # the experts (measured: §Perf iter. 4 regression)
+        dp = env.axes.get("pod", 1) * env.axes.get("data", 1)
+    if T % dp:
+        dp = 1
+    ep_flip = bool(env.ep_wide and env.moe_a2a and env.axes and dp > 1)
+    xg = x.reshape(dp, T // dp, D)
+    if env.axes:
+        xg = jax.lax.with_sharding_constraint(
+            xg, env.act_spec(("batch", None, "embed"), xg.shape)
+        )
+
+    disp, meta, aux = jax.vmap(partial(_moe_dispatch_local, cfg, p))(xg)
+    if ep_flip:
+        # EP-wide: flip the dispatch buffer from rank-sharded (dp over
+        # pod/data) to expert-sharded over ALL axes — GSPMD lowers the
+        # resharding transpose as an all-to-all carrying only the token
+        # payload (no dispatch-buffer all-reduce) — §Perf iteration 4
+        disp = jax.lax.with_sharding_constraint(
+            disp, env.act_spec((None, "experts", None, "embed"), disp.shape)
+        )
+    elif env.axes:
+        disp = jax.lax.with_sharding_constraint(
+            disp, env.act_spec(("batch", "experts", None, "embed"), disp.shape)
+        )
+
+    g = jnp.einsum("recd,edf->recf", disp, p["we_gate"])
+    u = jnp.einsum("recd,edf->recf", disp, p["we_up"])
+    h = jax.nn.silu(g) * u
+    out_e = jnp.einsum("recf,efd->recd", h, p["we_down"])
+
+    if ep_flip:
+        # flip back: expert-sharded results return to their owning rank
+        out_e = jax.lax.with_sharding_constraint(
+            out_e, env.act_spec(("batch", None, None, "embed"), out_e.shape)
+        )
+    y = jax.vmap(partial(_moe_combine_local, cfg, T=T // dp, D=D))(out_e, meta)
+    y = y.reshape(T, D)
+
+    if m.n_shared:
+        y = y + cm.swiglu(x, p["ws_gate"], p["ws_up"], p["ws_down"])
+    return y.astype(x.dtype), jnp.mean(aux)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _attn_train(cfg, env, p, x, positions):
+    h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+    o = offload.prefill_attention(env, q, k, v)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _moe_block_train(cfg, env, p, x, positions):
+    x = _attn_train(cfg, env, p, x, positions)
+    h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    B, S, D = h.shape
+    y, aux = moe_ffn(cfg, env, p, h.reshape(B * S, D))
+    x = x + y.reshape(B, S, D)
+    if env.axes:
+        x = jax.lax.with_sharding_constraint(
+            x, env.act_spec(("batch", "seq", "embed"), x.shape)
+        )
+    return x, aux
+
+
+def _dense_block_train(cfg, env, p, x, positions):
+    x = _attn_train(cfg, env, p, x, positions)
+    h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return x
+
+
+def hidden_states(cfg, env: Env, params, tokens, embeds=None, remat: bool = True):
+    x = cm.embed_lookup(params["embed"], tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    dense_blk = partial(_dense_block_train, cfg, env)
+    moe_blk = partial(_moe_block_train, cfg, env)
+    if remat:
+        dense_blk = jax.checkpoint(dense_blk, policy=jax.checkpoint_policies.nothing_saveable)
+        moe_blk = jax.checkpoint(moe_blk, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def dense_body(xc, p_slice):
+        return dense_blk(p_slice, xc, positions), None
+
+    def moe_body(carry, p_slice):
+        xc, aux = carry
+        xc, a = moe_blk(p_slice, xc, positions)
+        return (xc, aux + a), None
+
+    x, _ = jax.lax.scan(dense_body, x, params["dense_blocks"])
+    (x, aux), _ = jax.lax.scan(moe_body, (x, jnp.float32(0.0)), params["moe_blocks"])
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux / max(cfg.n_layers - cfg.moe.moe_layer_start, 1)
+
+
+def loss_fn(cfg, env: Env, params, batch):
+    hid, aux = hidden_states(cfg, env, params, batch["inputs"], batch.get("embeds"))
+    n_front = 0 if "embeds" not in batch else batch["embeds"].shape[1]
+    hid = hid[:, n_front:]
+    logits = cm.unembed(hid, params.get("unembed", params["embed"]), cfg.vocab)
+    ce = cm.cross_entropy_loss(logits, batch["targets"], batch.get("mask"))
+    loss = ce + cfg.moe.router_aux_coef * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# cache / prefill / decode  (attention identical to dense; FFN swapped)
+# ---------------------------------------------------------------------------
+cache_defs = dense.cache_defs
+init_cache = dense.init_cache
+
+
+def _split_cache(cfg, cache):
+    Ld = cfg.moe.moe_layer_start
+    return (
+        {k: (v[:Ld] if k != "lengths" else v) for k, v in cache.items()},
+        {k: (v[Ld:] if k != "lengths" else v) for k, v in cache.items()},
+    )
+
+
+def prefill(cfg, env: Env, params, tokens, cache, embeds=None):
+    x = cm.embed_lookup(params["embed"], tokens)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    dcache, mcache = _split_cache(cfg, cache)
+
+    def body(is_moe):
+        def f(xc, xs):
+            p, k_l, v_l = xs
+            h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+            q = cm.rope(q, positions, cfg.rope_theta)
+            k = cm.rope(k, positions, cfg.rope_theta)
+            o = offload.prefill_attention(env, q, k, v)
+            xc = xc + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+            h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+            if is_moe:
+                y, _ = moe_ffn(cfg, env, p, h.reshape(B * S, -1))
+                xc = xc + y.reshape(B, S, -1)
+            else:
+                xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+            k_l = jax.lax.dynamic_update_slice(k_l, k.astype(k_l.dtype), (0, 0, 0, 0))
+            v_l = jax.lax.dynamic_update_slice(v_l, v.astype(v_l.dtype), (0, 0, 0, 0))
+            if env.axes:
+                k_l, v_l = offload.constrain_cache(env, k_l, v_l)
+            return xc, (k_l, v_l)
+
+        return f
+
+    x, (kd, vd) = jax.lax.scan(
+        body(False), x, (params["dense_blocks"], dcache["k"], dcache["v"])
+    )
+    x, (km, vm) = jax.lax.scan(
+        body(True), x, (params["moe_blocks"], mcache["k"], mcache["v"])
+    )
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x[:, -1], params.get("unembed", params["embed"]), cfg.vocab)
+    new_cache = {
+        "k": jnp.concatenate([kd, km], 0),
+        "v": jnp.concatenate([vd, vm], 0),
+        "lengths": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, new_cache
+
+
+def decode_step(cfg, env: Env, params, cache, tokens):
+    lengths = cache["lengths"]
+    B = tokens.shape[0]
+    x = cm.embed_lookup(params["embed"], tokens)
+    pos = lengths[:, None]
+    bidx = jnp.arange(B)
+    dcache, mcache = _split_cache(cfg, cache)
+
+    def body(is_moe):
+        def f(xc, xs):
+            p, k_l, v_l = xs
+            h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+            q = jnp.einsum("bd,dhk->bhk", h, p["wq"])
+            k = jnp.einsum("bd,dhk->bhk", h, p["wk"])
+            v = jnp.einsum("bd,dhk->bhk", h, p["wv"])
+            q = cm.rope(q[:, None], pos, cfg.rope_theta)[:, 0]
+            k = cm.rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+            k_l = k_l.at[bidx, lengths].set(k.astype(k_l.dtype))
+            v_l = v_l.at[bidx, lengths].set(v.astype(v_l.dtype))
+            o = offload.decode_attention(env, q, k_l, v_l, lengths + 1)
+            xc = xc + jnp.einsum("bhk,hkd->bd", o, p["wo"])
+            h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+            if is_moe:
+                y, _ = moe_ffn(cfg, env, p, h)
+                xc = xc + y
+            else:
+                xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+            return xc, (k_l, v_l)
+
+        return f
+
+    x, (kd, vd) = jax.lax.scan(
+        body(False), x, (params["dense_blocks"], dcache["k"], dcache["v"])
+    )
+    x, (km, vm) = jax.lax.scan(
+        body(True), x, (params["moe_blocks"], mcache["k"], mcache["v"])
+    )
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x, params.get("unembed", params["embed"]), cfg.vocab)
+    new_cache = {
+        "k": jnp.concatenate([kd, km], 0),
+        "v": jnp.concatenate([vd, vm], 0),
+        "lengths": lengths + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,88 @@
+"""Unified Model API: ``build_model(cfg, env)`` -> :class:`Model`.
+
+Every family exposes the same five callables so the trainer, the serving
+engine, the dry-run and the benchmarks are family-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DEEPSEEK, DENSE, ENCDEC, MOE, RWKV6, ZAMBA2, ModelConfig
+from repro.core.placement import Env
+from repro.models import common as cm
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    env: Env
+    param_defs: Pytree
+    loss_fn: Callable[[Pytree, dict], tuple[jax.Array, dict]]
+    prefill: Callable[..., tuple[jax.Array, Pytree]]
+    decode_step: Callable[[Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]]
+    cache_defs: Callable[[int, int], Pytree]
+    init_cache: Callable[[int, int], Pytree]
+
+    # ---- derived helpers -------------------------------------------------
+    def init(self, rng: jax.Array) -> Pytree:
+        return cm.init_params(self.param_defs, rng, cm.param_dtype(self.cfg))
+
+    def param_shapes(self) -> Pytree:
+        return cm.shape_tree(self.param_defs, cm.param_dtype(self.cfg))
+
+    def param_specs(self) -> Pytree:
+        return cm.specs_for(
+            self.param_defs, self.env.param_rules(), self.env.axes, params=True
+        )
+
+    def cache_specs(self, batch: int, max_seq: int) -> Pytree:
+        from repro.core.placement import kv_rules
+
+        policy = self.env.kv_policy if self.env.offload == "hpu" else "none"
+        return cm.specs_for(
+            self.cache_defs(batch, max_seq), kv_rules(policy), self.env.axes
+        )
+
+    def cache_shapes(self, batch: int, max_seq: int) -> Pytree:
+        """ShapeDtypeStructs mirroring init_cache (no allocation)."""
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    def n_params(self) -> int:
+        return cm.count_params(self.param_defs)
+
+
+def build_model(cfg: ModelConfig, env: Env | None = None) -> Model:
+    env = env or Env()
+    if cfg.family == DENSE:
+        from repro.models import dense as fam
+    elif cfg.family == MOE:
+        from repro.models import moe as fam
+    elif cfg.family == DEEPSEEK:
+        from repro.models import deepseek as fam
+    elif cfg.family == RWKV6:
+        from repro.models import rwkv6 as fam
+    elif cfg.family == ZAMBA2:
+        from repro.models import zamba2 as fam
+    elif cfg.family == ENCDEC:
+        from repro.models import encdec as fam
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    import functools
+
+    return Model(
+        cfg=cfg,
+        env=env,
+        param_defs=fam.param_defs(cfg),
+        loss_fn=functools.partial(fam.loss_fn, cfg, env),
+        prefill=functools.partial(fam.prefill, cfg, env),
+        decode_step=functools.partial(fam.decode_step, cfg, env),
+        cache_defs=functools.partial(fam.cache_defs, cfg),
+        init_cache=functools.partial(fam.init_cache, cfg),
+    )

@@ -1,0 +1,289 @@
+"""RWKV6 "Finch" — attention-free RNN with data-dependent decay
+[arXiv:2404.05892].
+
+Time-mix: token-shift ddlerp (5-way LoRA-interpolated mixing), per-channel
+data-dependent decay w_t = exp(-exp(w0 + tanh(x_w @ w1) @ w2)), WKV state
+recurrence per head (state S in R^{N x N}, N = head_dim):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Train runs the recurrence with ``lax.scan`` over time in fp32 (the chunked
+GLA-style form is a perf option; see EXPERIMENTS.md §Perf).  Decode is a
+single-step state update — O(1) per token, which is why this arch runs the
+``long_500k`` cell.
+
+Paper-technique note (DESIGN.md §4): there is no KV cache; the (L,B,H,N,N)
+state takes the cache's place in the HPU layout (generalized offload).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.placement import Env
+from repro.models import common as cm
+from repro.models.common import ParamDef
+
+Pytree = Any
+
+N_MIX = 5  # w, k, v, r, g
+
+
+def _dims(cfg):
+    N = cfg.rwkv.head_dim
+    H = cfg.d_model // N
+    return H, N
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def param_defs(cfg) -> Pytree:
+    L, D, V, F = cfg.n_layers, cfg.d_model, cfg.padded_vocab(), cfg.d_ff
+    H, N = _dims(cfg)
+    r = cfg.rwkv
+    blocks = {
+        "ln1_s": ParamDef((L, D), ("layers", "embed"), "ones"),
+        "ln1_b": ParamDef((L, D), ("layers", "embed"), "zeros"),
+        "ln2_s": ParamDef((L, D), ("layers", "embed"), "ones"),
+        "ln2_b": ParamDef((L, D), ("layers", "embed"), "zeros"),
+        # time-mix ddlerp
+        "mu_x": ParamDef((L, D), ("layers", "embed"), "zeros"),
+        "mu_5": ParamDef((L, N_MIX, D), ("layers", None, "embed"), "zeros"),
+        "tm_a": ParamDef((L, D, N_MIX * r.mix_lora), ("layers", "embed", None), "small"),
+        "tm_b": ParamDef((L, N_MIX, r.mix_lora, D), ("layers", None, None, "embed"), "small"),
+        # data-dependent decay
+        "w0": ParamDef((L, D), ("layers", "embed"), "zeros"),
+        "w1": ParamDef((L, D, r.decay_lora), ("layers", "embed", None), "small"),
+        "w2": ParamDef((L, r.decay_lora, D), ("layers", None, "embed"), "small"),
+        # projections
+        "wr": ParamDef((L, D, D), ("layers", "embed", "heads")),
+        "wk": ParamDef((L, D, D), ("layers", "embed", "heads")),
+        "wv": ParamDef((L, D, D), ("layers", "embed", "heads")),
+        "wg": ParamDef((L, D, D), ("layers", "embed", "heads")),
+        "wo": ParamDef((L, D, D), ("layers", "heads", "embed")),
+        "u": ParamDef((L, H, N), ("layers", "heads", None), "small"),
+        "ln_x_s": ParamDef((L, D), ("layers", "embed"), "ones"),
+        "ln_x_b": ParamDef((L, D), ("layers", "embed"), "zeros"),
+        # channel-mix
+        "mu_ck": ParamDef((L, D), ("layers", "embed"), "zeros"),
+        "mu_cr": ParamDef((L, D), ("layers", "embed"), "zeros"),
+        "cm_k": ParamDef((L, D, F), ("layers", "embed", "mlp")),
+        "cm_v": ParamDef((L, F, D), ("layers", "mlp", "embed")),
+        "cm_r": ParamDef((L, D, D), ("layers", "embed", "heads")),
+    }
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), "embed"),
+        "ln0_s": ParamDef((D,), ("embed",), "ones"),
+        "ln0_b": ParamDef((D,), ("embed",), "zeros"),
+        "blocks": blocks,
+        "final_norm_s": ParamDef((D,), ("embed",), "ones"),
+        "final_norm_b": ParamDef((D,), ("embed",), "zeros"),
+        "unembed": ParamDef((V, D), ("vocab", "embed"), "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# time-mix pieces
+# ---------------------------------------------------------------------------
+def _ddlerp(p, x, xx):
+    """5-way data-dependent interpolation.  x, xx: (..., D) -> 5 x (..., D)."""
+    sx = xx - x
+    base = x + sx * p["mu_x"].astype(x.dtype)
+    z = jnp.tanh(jnp.einsum("...d,dr->...r", base, p["tm_a"]))
+    z = z.reshape(z.shape[:-1] + (N_MIX, p["tm_b"].shape[1]))
+    off = jnp.einsum("...mr,mrd->...md", z, p["tm_b"])  # (..., 5, D)
+    mixed = x[..., None, :] + sx[..., None, :] * (p["mu_5"].astype(x.dtype) + off)
+    return [mixed[..., i, :] for i in range(N_MIX)]
+
+
+def _decay(p, x_w):
+    """Data-dependent per-channel decay in (0,1), fp32."""
+    lo = jnp.einsum("...d,dr->...r", x_w.astype(jnp.float32), p["w1"].astype(jnp.float32))
+    ww = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "...r,rd->...d", jnp.tanh(lo), p["w2"].astype(jnp.float32)
+    )
+    return jnp.exp(-jnp.exp(ww - 0.5))  # -0.5 centers init decay ~ exp(-0.6)
+
+
+def _wkv_scan(r, k, v, w, u, state, chunk: int = 256):
+    """WKV recurrence.  r,k,v,w: (B,S,H,N) fp32; u (H,N); state (B,H,N,N).
+
+    Returns y (B,S,H,N), final state.  State layout: S[h, i(k-index), j(v-index)].
+
+    Time-chunked remat: a plain scan makes autodiff save the FULL per-step
+    (B,H,N,N) state trajectory in fp32 (S x 1 MB/layer — dominated the
+    rwkv6 train_4k memory term).  Scanning over chunks with a checkpointed
+    inner scan keeps only chunk-boundary states and recomputes inside the
+    chunk during backward (classic remat-over-time).
+    """
+    B, S, H, N = r.shape
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,N)
+        a = kt[..., :, None] * vt[..., None, :]  # (B,H,N,N) outer
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * a)
+        s = wt[..., :, None] * s + a
+        return s, y
+
+    if S <= chunk or S % chunk:
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))  # (S,B,H,N)
+        state, ys = jax.lax.scan(step, state, xs)
+        return jnp.moveaxis(ys, 0, 1), state
+
+    n_c = S // chunk
+    xs = tuple(
+        jnp.moveaxis(t.reshape(B, n_c, chunk, H, N), 1, 0) for t in (r, k, v, w)
+    )  # (n_c, B, chunk, H, N)
+
+    @jax.checkpoint
+    def chunk_step(s, inp):
+        inner = tuple(jnp.moveaxis(t, 1, 0) for t in inp)  # (chunk, B, H, N)
+        s, ys = jax.lax.scan(step, s, inner)
+        return s, jnp.moveaxis(ys, 0, 1)  # (B, chunk, H, N)
+
+    state, ys = jax.lax.scan(chunk_step, state, xs)  # ys (n_c, B, chunk, H, N)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, N)
+    return y, state
+
+
+def _time_mix(cfg, p, x, shift_in, state):
+    """x (B,S,D); shift_in (B,D) last token of prev segment; state (B,H,N,N).
+
+    Returns (out (B,S,D), new_shift (B,D), new_state)."""
+    H, N = _dims(cfg)
+    B, S, D = x.shape
+    xx = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    x_w, x_k, x_v, x_r, x_g = _ddlerp(p, x, xx)
+    r = jnp.einsum("bsd,de->bse", x_r, p["wr"]).reshape(B, S, H, N)
+    k = jnp.einsum("bsd,de->bse", x_k, p["wk"]).reshape(B, S, H, N)
+    v = jnp.einsum("bsd,de->bse", x_v, p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", x_g, p["wg"]))
+    w = _decay(p, x_w).reshape(B, S, H, N)
+
+    y, state = _wkv_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w, p["u"].astype(jnp.float32), state,
+    )
+    y = y.reshape(B, S, D)
+    # group-norm per head
+    y = y.reshape(B, S, H, N)
+    mu = jnp.mean(y, -1, keepdims=True)
+    var = jnp.var(y, -1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, D)
+    y = y * p["ln_x_s"].astype(jnp.float32) + p["ln_x_b"].astype(jnp.float32)
+    out = jnp.einsum("bsd,de->bse", y.astype(x.dtype) * g, p["wo"])
+    return out, x[:, -1], state
+
+
+def _channel_mix(cfg, p, x, shift_in):
+    xx = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    x_k = x + (xx - x) * p["mu_ck"].astype(x.dtype)
+    x_r = x + (xx - x) * p["mu_cr"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", x_k, p["cm_k"])))
+    v = jnp.einsum("bsf,fd->bsd", k, p["cm_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x_r, p["cm_r"]))
+    return r * v, x[:, -1]
+
+
+def _block(cfg, env: Env, p, x, tm_shift, cm_shift, state):
+    h = cm.layernorm(x, p["ln1_s"], p["ln1_b"], cfg.norm_eps)
+    o, tm_shift, state = _time_mix(cfg, p, h, tm_shift, state)
+    x = x + o
+    h = cm.layernorm(x, p["ln2_s"], p["ln2_b"], cfg.norm_eps)
+    o, cm_shift = _channel_mix(cfg, p, h, cm_shift)
+    x = x + o
+    if env.axes:
+        x = jax.lax.with_sharding_constraint(
+            x, env.act_spec(("batch", "seq", "embed"), x.shape)
+        )
+    return x, tm_shift, cm_shift, state
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+def _run_blocks(cfg, env, params, x, cache=None, remat=True):
+    """Scan blocks; threads shift/state caches.  x (B,S,D)."""
+    H, N = _dims(cfg)
+    B = x.shape[0]
+    L = cfg.n_layers
+    if cache is None:
+        tm0 = jnp.zeros((L, B, cfg.d_model), x.dtype)
+        cm0 = jnp.zeros((L, B, cfg.d_model), x.dtype)
+        st0 = jnp.zeros((L, B, H, N, N), jnp.float32)
+    else:
+        tm0, cm0, st0 = cache["tm_shift"], cache["cm_shift"], cache["state"]
+
+    blk = partial(_block, cfg, env)
+    if remat:
+        blk = jax.checkpoint(blk, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(xc, xs):
+        p, tm, cmx, st = xs
+        xc, tm, cmx, st = blk(p, xc, tm, cmx, st)
+        return xc, (tm, cmx, st)
+
+    x, (tm, cmx, st) = jax.lax.scan(body, x, (params["blocks"], tm0, cm0, st0))
+    new_cache = {"tm_shift": tm, "cm_shift": cmx, "state": st}
+    return x, new_cache
+
+
+def hidden_states(cfg, env: Env, params, tokens, remat: bool = True):
+    x = cm.embed_lookup(params["embed"], tokens)
+    x = cm.layernorm(x, params["ln0_s"], params["ln0_b"], cfg.norm_eps)
+    x, _ = _run_blocks(cfg, env, params, x, remat=remat)
+    return cm.layernorm(x, params["final_norm_s"], params["final_norm_b"], cfg.norm_eps)
+
+
+def loss_fn(cfg, env: Env, params, batch):
+    hid = hidden_states(cfg, env, params, batch["inputs"])
+    logits = cm.unembed(hid, params["unembed"], cfg.vocab)
+    loss = cm.cross_entropy_loss(logits, batch["targets"], batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# cache / prefill / decode
+# ---------------------------------------------------------------------------
+def cache_defs(cfg, batch: int, max_seq: int) -> Pytree:
+    """max_seq is irrelevant for an RNN — state is O(1) in sequence length."""
+    L, D = cfg.n_layers, cfg.d_model
+    H, N = _dims(cfg)
+    return {
+        "tm_shift": ParamDef((L, batch, D), ("layers", "kv_batch", "embed"), "zeros"),
+        "cm_shift": ParamDef((L, batch, D), ("layers", "kv_batch", "embed"), "zeros"),
+        "state": ParamDef((L, batch, H, N, N), ("layers", "kv_batch", "state", None, None), "zeros"),
+        "lengths": ParamDef((batch,), ("kv_batch",), "zeros"),
+    }
+
+
+def init_cache(cfg, batch: int, max_seq: int = 0, dtype=jnp.bfloat16) -> Pytree:
+    defs = cache_defs(cfg, batch, max_seq)
+    dt = {"tm_shift": dtype, "cm_shift": dtype, "state": jnp.float32, "lengths": jnp.int32}
+    return {k: jnp.zeros(d.shape, dt[k]) for k, d in defs.items()}
+
+
+def prefill(cfg, env: Env, params, tokens, cache, embeds=None):
+    x = cm.embed_lookup(params["embed"], tokens)
+    x = cm.layernorm(x, params["ln0_s"], params["ln0_b"], cfg.norm_eps)
+    B, S = tokens.shape
+    cache_in = {
+        "tm_shift": cache["tm_shift"].astype(x.dtype),
+        "cm_shift": cache["cm_shift"].astype(x.dtype),
+        "state": cache["state"],
+    }
+    x, new_cache = _run_blocks(cfg, env, params, x, cache_in, remat=False)
+    x = cm.layernorm(x, params["final_norm_s"], params["final_norm_b"], cfg.norm_eps)
+    logits = cm.unembed(x[:, -1], params["unembed"], cfg.vocab)
+    new_cache["lengths"] = cache["lengths"] + S
+    return logits, new_cache
+
+
+def decode_step(cfg, env: Env, params, cache, tokens):
+    logits, new_cache = prefill(cfg, env, params, tokens[:, None], cache)
+    return logits, new_cache

@@ -1,0 +1,274 @@
+"""Zamba2 hybrid: mamba2 backbone + one *shared* attention+MLP block
+[arXiv:2411.15242].
+
+The shared block (weight-tied across its invocation slots, with per-slot
+LoRA deltas on q/k/v) runs every ``shared_block_period`` mamba layers; it
+sees ``concat([x, x_embed])`` (2*d_model) and its output is projected back
+to d_model by a per-slot linear.  Its KV caches are ordinary attention
+caches -> offloaded per the paper; the mamba conv/ssm states ride along in
+the same cache pytree (generalized offload, DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import offload
+from repro.core.placement import Env
+from repro.models import common as cm
+from repro.models import mamba2
+from repro.models.common import ParamDef
+
+Pytree = Any
+
+
+def _slots(cfg) -> list[int]:
+    """Mamba-layer indices *before* which the shared block runs."""
+    p = cfg.hybrid.shared_block_period
+    return [i for i in range(cfg.n_layers) if i % p == p - 1]
+
+
+def _attn_dims(cfg):
+    D2 = 2 * cfg.d_model
+    H = cfg.n_heads
+    Dh = D2 // H
+    return D2, H, Dh
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def param_defs(cfg) -> Pytree:
+    D, V, F = cfg.d_model, cfg.padded_vocab(), cfg.d_ff
+    D2, H, Dh = _attn_dims(cfg)
+    n_slots = len(_slots(cfg))
+    r = cfg.hybrid.lora_rank
+    shared = {
+        "ln1": ParamDef((D2,), ("embed",), "zeros"),
+        "wq": ParamDef((D2, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((D2, H, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((D2, H, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, Dh, D2), ("heads", "head_dim", "embed")),
+        "ln2": ParamDef((D2,), ("embed",), "zeros"),
+        "w_gate": ParamDef((D2, F), ("embed", "mlp")),
+        "w_up": ParamDef((D2, F), ("embed", "mlp")),
+        "w_down": ParamDef((F, D2), ("mlp", "embed")),
+        # per-slot LoRA on q/k/v + per-slot down projection to D
+        "lora_a": ParamDef((n_slots, 3, D2, r), (None, None, "embed", None), "small"),
+        "lora_b": ParamDef((n_slots, 3, r, H * Dh), (None, None, None, "heads"), "zeros"),
+        "down": ParamDef((n_slots, D2, D), (None, "embed", None)),
+    }
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), "embed"),
+        "mamba": mamba2.param_defs(cfg, cfg.n_layers),
+        "shared": shared,
+        "final_norm": ParamDef((D,), ("embed",), "zeros"),
+        "unembed": ParamDef((V, D), ("vocab", "embed"), "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# shared attention block
+# ---------------------------------------------------------------------------
+def _shared_qkv(cfg, p, slot, h):
+    """h (..., D2) -> q,k,v (..., H, Dh) with per-slot LoRA deltas."""
+    D2, H, Dh = _attn_dims(cfg)
+    outs = []
+    for i, w in enumerate((p["wq"], p["wk"], p["wv"])):
+        base = jnp.einsum("...d,dhk->...hk", h, w)
+        lo = jnp.einsum("...d,dr->...r", h, p["lora_a"][slot, i])
+        delta = jnp.einsum("...r,re->...e", lo, p["lora_b"][slot, i])
+        outs.append(base + delta.reshape(delta.shape[:-1] + (H, Dh)))
+    return outs
+
+
+def _shared_block_train(cfg, env: Env, p, slot, x, x0, positions):
+    """Train/prefill shared block.  Returns (delta_to_x (B,S,D), k, v)."""
+    h_in = jnp.concatenate([x, x0], axis=-1)
+    h = cm.rmsnorm(h_in, p["ln1"], cfg.norm_eps)
+    q, k, v = _shared_qkv(cfg, p, slot, h)
+    q = cm.rope(q, positions, cfg.rope_theta)
+    k = cm.rope(k, positions, cfg.rope_theta)
+    o = offload.prefill_attention(env, q, k, v)
+    h_in = h_in + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    g = cm.rmsnorm(h_in, p["ln2"], cfg.norm_eps)
+    h_in = h_in + cm.swiglu(g, p["w_gate"], p["w_up"], p["w_down"])
+    return jnp.einsum("bse,ed->bsd", h_in, p["down"][slot]), k, v
+
+
+def _shared_block_decode(cfg, env: Env, p, slot, x, x0, k_cache, v_cache, lengths):
+    B = x.shape[0]
+    pos = lengths[:, None]
+    bidx = jnp.arange(B)
+    h_in = jnp.concatenate([x, x0], axis=-1)
+    h = cm.rmsnorm(h_in, p["ln1"], cfg.norm_eps)
+    q, k, v = _shared_qkv(cfg, p, slot, h)
+    q = cm.rope(q[:, None], pos, cfg.rope_theta)[:, 0]
+    k = cm.rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+    k_cache = k_cache.at[bidx, lengths].set(k.astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, lengths].set(v.astype(v_cache.dtype))
+    o = offload.decode_attention(env, q, k_cache, v_cache, lengths + 1)
+    h_in = h_in + jnp.einsum("bhk,hkd->bd", o, p["wo"])
+    g = cm.rmsnorm(h_in, p["ln2"], cfg.norm_eps)
+    h_in = h_in + cm.swiglu(g, p["w_gate"], p["w_up"], p["w_down"])
+    return jnp.einsum("be,ed->bd", h_in, p["down"][slot]), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# backbone traversal (segments of mamba scan + shared-block interjections)
+# ---------------------------------------------------------------------------
+def _segments(cfg):
+    """[(start, end, slot_after or None)]: scan mamba[start:end], then run
+    shared block #slot (if not None) BEFORE the next segment."""
+    slots = _slots(cfg)
+    segs = []
+    prev = 0
+    for si, li in enumerate(slots):
+        segs.append((prev, li + 1, si))
+        prev = li + 1
+    if prev < cfg.n_layers:
+        segs.append((prev, cfg.n_layers, None))
+    return segs
+
+
+def _run_backbone(cfg, env: Env, params, x, cache, positions, decode: bool, remat=False):
+    """x: (B,S,D) train/prefill or (B,D) decode.  Returns (x, new_cache)."""
+    x0 = x
+    mam = params["mamba"]
+    sh = params["shared"]
+    conv_all, ssm_all = cache["conv"], cache["ssm"]
+    k_all, v_all = cache["k"], cache["v"]
+    lengths = cache["lengths"]
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+
+    mamba_fwd = mamba2.forward
+    if remat:
+        mamba_fwd = jax.checkpoint(
+            mamba2.forward, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(0,),
+        )
+
+    def seg_scan(xc, lo, hi):
+        p_seg = jax.tree.map(lambda a: a[lo:hi], mam)
+
+        def body(c, xs):
+            xc_, = (c,)
+            p, cv, st = xs
+            if decode:
+                y, cv, st = mamba_fwd(cfg, p, xc_[:, None], cv, st, cfg.norm_eps)
+                y = y[:, 0]
+            else:
+                y, cv, st = mamba_fwd(cfg, p, xc_, cv, st, cfg.norm_eps)
+            return xc_ + y, (cv, st)
+
+        xc, (cv, st) = jax.lax.scan(
+            body, xc, (p_seg, conv_all[lo:hi], ssm_all[lo:hi])
+        )
+        new_conv.append(cv)
+        new_ssm.append(st)
+        return xc
+
+    for lo, hi, slot in _segments(cfg):
+        x = seg_scan(x, lo, hi)
+        if slot is not None:
+            if decode:
+                delta, kc, vc = _shared_block_decode(
+                    cfg, env, sh, slot, x, x0, k_all[slot], v_all[slot], lengths
+                )
+                new_k.append(kc)
+                new_v.append(vc)
+            else:
+                delta, k, v = _shared_block_train(cfg, env, sh, slot, x, x0, positions)
+                if k_all is not None:  # prefill: write cache
+                    kc = jax.lax.dynamic_update_slice(
+                        k_all[slot], k.astype(k_all.dtype), (0, 0, 0, 0)
+                    )
+                    vc = jax.lax.dynamic_update_slice(
+                        v_all[slot], v.astype(v_all.dtype), (0, 0, 0, 0)
+                    )
+                    new_k.append(kc)
+                    new_v.append(vc)
+            x = x + delta
+
+    new_cache = {
+        "conv": jnp.concatenate(new_conv, 0),
+        "ssm": jnp.concatenate(new_ssm, 0),
+        "k": jnp.stack(new_k, 0) if new_k else k_all,
+        "v": jnp.stack(new_v, 0) if new_v else v_all,
+        "lengths": lengths,
+    }
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+def _empty_cache(cfg, B, max_seq, dtype, with_kv: bool):
+    s = cfg.ssm
+    d_inner, H, conv_dim, _ = mamba2.dims(cfg)
+    D2, Ha, Dh = _attn_dims(cfg)
+    n_slots = len(_slots(cfg))
+    return {
+        "conv": jnp.zeros((cfg.n_layers, B, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, B, H, s.d_head, s.d_state), jnp.float32),
+        "k": jnp.zeros((n_slots, B, max_seq, cfg.n_kv_heads, Dh), dtype) if with_kv else None,
+        "v": jnp.zeros((n_slots, B, max_seq, cfg.n_kv_heads, Dh), dtype) if with_kv else None,
+        "lengths": jnp.zeros((B,), jnp.int32),
+    }
+
+
+def cache_defs(cfg, batch: int, max_seq: int) -> Pytree:
+    s = cfg.ssm
+    d_inner, H, conv_dim, _ = mamba2.dims(cfg)
+    D2, Ha, Dh = _attn_dims(cfg)
+    n_slots = len(_slots(cfg))
+    return {
+        "conv": ParamDef((cfg.n_layers, batch, s.d_conv - 1, conv_dim), ("layers", "kv_batch", None, "state"), "zeros"),
+        "ssm": ParamDef((cfg.n_layers, batch, H, s.d_head, s.d_state), ("layers", "kv_batch", "state", None, None), "zeros"),
+        "k": ParamDef((n_slots, batch, max_seq, cfg.n_kv_heads, Dh), ("layers", "kv_batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
+        "v": ParamDef((n_slots, batch, max_seq, cfg.n_kv_heads, Dh), ("layers", "kv_batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
+        "lengths": ParamDef((batch,), ("kv_batch",), "zeros"),
+    }
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Pytree:
+    return _empty_cache(cfg, batch, max_seq, dtype, with_kv=True)
+
+
+def hidden_states(cfg, env: Env, params, tokens, remat: bool = True):
+    x = cm.embed_lookup(params["embed"], tokens)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cache = _empty_cache(cfg, B, 0, x.dtype, with_kv=False)
+    x, _ = _run_backbone(cfg, env, params, x, cache, positions, decode=False, remat=remat)
+    return cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg, env: Env, params, batch):
+    hid = hidden_states(cfg, env, params, batch["inputs"])
+    logits = cm.unembed(hid, params["unembed"], cfg.vocab)
+    loss = cm.cross_entropy_loss(logits, batch["targets"], batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+def prefill(cfg, env: Env, params, tokens, cache, embeds=None):
+    x = cm.embed_lookup(params["embed"], tokens)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, new_cache = _run_backbone(cfg, env, params, x, cache, positions, decode=False)
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x[:, -1], params["unembed"], cfg.vocab)
+    new_cache["lengths"] = cache["lengths"] + S
+    return logits, new_cache
+
+
+def decode_step(cfg, env: Env, params, cache, tokens):
+    x = cm.embed_lookup(params["embed"], tokens)  # (B, D)
+    x, new_cache = _run_backbone(cfg, env, params, x, cache, None, decode=True)
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x, params["unembed"], cfg.vocab)
+    new_cache["lengths"] = cache["lengths"] + 1
+    return logits, new_cache

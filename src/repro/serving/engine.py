@@ -1,0 +1,140 @@
+"""Continuous-batching serving engine with HPU-offloaded decode.
+
+Slot-based continuous batching (Orca-style): a fixed decode batch of
+``n_slots`` sequences; finished sequences free their slot and queued
+requests are prefilled into it while decode keeps running for the rest —
+this is what keeps the decode batch (and thus the offloaded-attention
+bandwidth utilization the paper optimizes) high.
+
+The decode step is wrapped by ``core.pipeline.pipelined_step`` when
+``sub_batches > 1`` (paper Fig. 3), and attention runs through
+``core.offload`` in the layout chosen by ``core.balance.plan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import pipelined_step
+from repro.models.registry import Model
+from repro.serving import kv_cache
+from repro.serving.sampler import SamplerConfig, sample
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int
+    eos_id: int = -1                # -1: never stops early
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    generated: int = 0
+    peak_active: int = 0
+
+
+class Engine:
+    def __init__(
+        self,
+        model: Model,
+        params: Pytree,
+        n_slots: int,
+        max_seq: int,
+        sampler: SamplerConfig = SamplerConfig(),
+        sub_batches: int = 1,
+        rng: jax.Array | None = None,
+    ):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.sampler = sampler
+        self.cache = model.init_cache(n_slots, max_seq)
+        self.slots: list[Request | None] = [None] * n_slots
+        self.queue: deque[Request] = deque()
+        self.stats = EngineStats()
+        self.rng = rng if rng is not None else jax.random.key(0)
+
+        self._prefill = jax.jit(model.prefill)
+        step = pipelined_step(model.decode_step, sub_batches)
+        self._decode = jax.jit(step)
+
+    # ------------------------------------------------------------- requests
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    # ----------------------------------------------------------------- step
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            sub_cache = self.model.init_cache(1, self.max_seq)
+            kwargs = {}
+            logits, sub_cache = self._prefill(self.params, prompt, sub_cache, **kwargs)
+            self.cache = kv_cache.insert(self.cache, sub_cache, slot)
+            self.slots[slot] = req
+            tok = int(sample(logits, self._next_rng(), self.sampler)[0])
+            req.out_tokens.append(tok)
+            self.stats.prefills += 1
+            self.stats.generated += 1
+
+    def _next_rng(self) -> jax.Array:
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def step(self) -> bool:
+        """One engine iteration: admit -> batched decode.  Returns whether
+        any work remains."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return bool(self.queue)
+        self.stats.peak_active = max(self.stats.peak_active, len(active))
+
+        tokens = np.zeros((len(self.slots),), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is not None and req.out_tokens:
+                tokens[i] = req.out_tokens[-1]
+        logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tokens))
+        self.stats.decode_steps += 1
+        next_toks = sample(logits, self._next_rng(), self.sampler)
+        next_host = np.asarray(next_toks)
+
+        for i in active:
+            req = self.slots[i]
+            tok = int(next_host[i])
+            req.out_tokens.append(tok)
+            self.stats.generated += 1
+            length = len(req.prompt) + len(req.out_tokens)
+            if (
+                tok == req.eos_id
+                or len(req.out_tokens) >= req.max_new_tokens
+                or length >= self.max_seq - 1
+            ):
+                req.done = True
+                self.slots[i] = None
+                self.cache = kv_cache.reset_slot(self.cache, i)
+        return any(s is not None for s in self.slots) or bool(self.queue)
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return self.stats

@@ -1,0 +1,51 @@
+"""Slot-level KV cache management for continuous batching.
+
+All model families expose caches as flat dicts whose non-``lengths``
+leaves carry the batch dimension at axis 1 (stacked layers/slots at axis
+0) — so slot insert/evict is family-agnostic: we slice axis 1 (axis 0 for
+``lengths``).  The cache lives sharded in the HPU layout
+(``Model.cache_specs``); slot writes are index updates that XLA keeps
+local to the owning shards.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def batch_axis(key: str) -> int:
+    return 0 if key == "lengths" else 1
+
+
+def n_slots(cache: Pytree) -> int:
+    return cache["lengths"].shape[0]
+
+
+def insert(cache: Pytree, sub: Pytree, slot: int) -> Pytree:
+    """Write a single-sequence cache ``sub`` (batch size 1) into ``slot``."""
+    out = {}
+    for k, v in cache.items():
+        ax = batch_axis(k)
+        idx = [slice(None)] * v.ndim
+        idx[ax] = slot
+        out[k] = v.at[tuple(idx)].set(jnp.squeeze(sub[k], axis=ax))
+    return out
+
+
+def reset_slot(cache: Pytree, slot: int) -> Pytree:
+    """Zero a finished slot (length <- 0 frees it logically)."""
+    out = {}
+    for k, v in cache.items():
+        ax = batch_axis(k)
+        idx = [slice(None)] * v.ndim
+        idx[ax] = slot
+        out[k] = v.at[tuple(idx)].set(jnp.zeros(()).astype(v.dtype))
+    return out
+
+
+def kv_bytes(cache: Pytree) -> int:
+    return sum(v.size * v.dtype.itemsize for v in jax.tree.leaves(cache))

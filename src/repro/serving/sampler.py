@@ -1,0 +1,24 @@
+"""Token sampling (greedy / temperature / top-k), pure JAX."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0   # 0 -> greedy
+    top_k: int = 0             # 0 -> no truncation
+
+
+def sample(logits: jax.Array, rng: jax.Array, cfg: SamplerConfig) -> jax.Array:
+    """logits (B, V) -> tokens (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,52 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 quantization with error feedback (residual carried across steps):
+the gradient is scaled per-leaf to int8, reduced in int8 (4x fewer bytes
+on the `data` axis all-reduce), dequantized, and the quantization error is
+added back to the next step's gradient.  ``compress`` / ``decompress`` are
+pure functions so the numerics are unit-testable on CPU; the byte saving
+is realized when the reduce runs over the int8 payload (see
+``distributed.collectives.int8_psum``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+INT8_MAX = 127.0
+
+
+def init_error(params: Pytree) -> Pytree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads: Pytree, error: Pytree):
+    """-> (int8 payload, scales, new_error)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / INT8_MAX
+        q = jnp.clip(jnp.round(g32 / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+        new_e = g32 - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    out = jax.tree.map(one, grads, error)
+    istuple = lambda x: isinstance(x, tuple)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=istuple)
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=istuple)
+    e = jax.tree.map(lambda t: t[2], out, is_leaf=istuple)
+    return q, s, e
+
+
+def decompress(q: Pytree, scales: Pytree) -> Pytree:
+    return jax.tree.map(lambda qi, si: qi.astype(jnp.float32) * si, q, scales)
+
+
+def compress_grads(grads: Pytree, error: Pytree):
+    """Round-trip (numerics of a compressed all-reduce) + new error state."""
+    q, s, e = compress(grads, error)
+    return decompress(q, s), e

@@ -1,0 +1,103 @@
+"""Pure-JAX AdamW + LR schedules (no optax in this container).
+
+Schedules: cosine, constant, and WSD (warmup-stable-decay) — the MiniCPM
+schedule the minicpm-2b config calls for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+def make_schedule(tc: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    warm, total = tc.warmup_steps, tc.total_steps
+
+    def cosine(step):
+        frac = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+        return tc.lr * jnp.where(
+            step < warm,
+            step / max(warm, 1),
+            0.5 * (1.0 + jnp.cos(jnp.pi * frac)),
+        )
+
+    def const(step):
+        return tc.lr * jnp.minimum(step / max(warm, 1), 1.0)
+
+    def wsd(step):
+        """Warmup-Stable-Decay (MiniCPM): flat until stable_frac, then a
+        fast exponential-ish (cosine-tail) decay to 10% of peak."""
+        stable_end = warm + (total - warm) * tc.stable_frac
+        decay_frac = jnp.clip((step - stable_end) / max(total - stable_end, 1), 0.0, 1.0)
+        decay = 0.1 + 0.9 * 0.5 * (1.0 + jnp.cos(jnp.pi * decay_frac))
+        return tc.lr * jnp.where(
+            step < warm,
+            step / max(warm, 1),
+            jnp.where(step < stable_end, 1.0, decay),
+        )
+
+    return {"cosine": cosine, "const": const, "wsd": wsd}[tc.schedule]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    tc: TrainConfig
+    moment_dtype: Any = jnp.float32
+
+    def init(self, params: Pytree) -> Pytree:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: Pytree, opt_state: Pytree, params: Pytree):
+        tc = self.tc
+        step = opt_state["step"] + 1
+        lr = make_schedule(tc)(step.astype(jnp.float32))
+
+        # global-norm clip in fp32
+        gsq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+        )
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+        b1, b2 = tc.b1, tc.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = b1 * m32 + (1 - b1) * g
+            v_new = b2 * v32 + (1 - b2) * jnp.square(g)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return (
+                p_new.astype(p.dtype),
+                m_new.astype(self.moment_dtype),
+                v_new.astype(self.moment_dtype),
+            )
+
+        out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": new_m, "v": new_v, "step": step}
+        return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,123 @@
+"""pjit train-step builder.
+
+``make_train_step(model, run_cfg)`` returns:
+  * ``init_state(rng)``  — TrainState pytree (params + AdamW moments + step)
+  * ``train_step(state, batch) -> (state, metrics)``
+  * ``state_specs()``    — PartitionSpec pytree (ZeRO: moments take the
+                           params' FSDP/TP specs; with zero_stage>=1 the
+                           moments' d_model axis is data-sharded even when
+                           params are not, via param_rules(fsdp=True))
+
+Grad accumulation scans over microbatches; remat policy is owned by the
+model code (per-block ``jax.checkpoint``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.core.placement import param_rules
+from repro.models import common as cm
+from repro.models.registry import Model
+from repro.training import compression
+from repro.training.optimizer import AdamW
+
+Pytree = Any
+
+
+def make_train_step(model: Model, run: RunConfig):
+    tc = run.train
+    pc = run.parallel
+    opt = AdamW(tc, moment_dtype=jnp.dtype(pc.optimizer_dtype))
+    env = model.env
+    zrules = param_rules(env.sequence_parallel, fsdp=(pc.zero_stage >= 1 or env.fsdp))
+    zspecs = cm.specs_for(model.param_defs, zrules, env.axes, params=True)
+
+    def constrain_grads(grads):
+        """Pin the grad accumulator to the ZeRO layout: the per-microbatch
+        cross-data reduction then lowers as a reduce-scatter into shards
+        instead of a full fp32 all-reduce (§Perf: halves train wire bytes,
+        16x smaller resident accumulator)."""
+        if not env.axes:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, zspecs
+        )
+
+    def init_state(rng: jax.Array) -> Pytree:
+        params = model.init(rng)
+        state = {"params": params, "opt": opt.init(params)}
+        if pc.grad_compression == "int8":
+            state["err"] = compression.init_error(params)
+        return state
+
+    def state_shapes() -> Pytree:
+        return jax.eval_shape(init_state, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def state_specs() -> Pytree:
+        pspecs = model.param_specs()
+        # ZeRO-1: moments take FSDP-style specs (d_model over data) even if
+        # params are TP-only replicated over data.
+        specs = {
+            "params": pspecs,
+            "opt": {
+                "m": zspecs,
+                "v": zspecs,
+                "step": jax.sharding.PartitionSpec(),
+            },
+        }
+        if pc.grad_compression == "int8":
+            specs["err"] = zspecs
+        return specs
+
+    def loss_for_grads(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for_grads, has_aux=True)
+
+    def compute_grads(params, batch):
+        if pc.grad_accum <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        micro = jax.tree.map(
+            lambda x: x.reshape((pc.grad_accum, x.shape[0] // pc.grad_accum) + x.shape[1:]),
+            batch,
+        )
+
+        acc_dt = jnp.dtype(pc.grad_accum_dtype)
+
+        def body(acc, mb):
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc_g, acc_l = acc
+            grads = constrain_grads(grads)
+            acc_g = jax.tree.map(
+                lambda a, g: a + (g / pc.grad_accum).astype(acc_dt), acc_g, grads
+            )
+            acc_g = constrain_grads(acc_g)
+            return (acc_g, acc_l + loss / pc.grad_accum), metrics
+
+        zero = constrain_grads(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        )
+        (grads, loss), metrics = jax.lax.scan(body, (zero, jnp.float32(0.0)), micro)
+        metrics = jax.tree.map(lambda x: x[-1], metrics)
+        return loss, metrics, grads
+
+    def train_step(state: Pytree, batch: Pytree):
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        new_state = dict(state)
+        if pc.grad_compression == "int8":
+            grads, new_err = compression.compress_grads(grads, state["err"])
+            new_state["err"] = new_err
+        params, opt_state, opt_metrics = opt.update(grads, state["opt"], state["params"])
+        new_state["params"] = params
+        new_state["opt"] = opt_state
+        metrics = {**metrics, **opt_metrics}
+        return new_state, metrics
+
+    return init_state, train_step, state_specs, state_shapes

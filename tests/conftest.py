@@ -1,0 +1,8 @@
+import os
+
+# keep tests at 1 device — the 512-device override belongs ONLY to dryrun.py
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

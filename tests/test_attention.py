@@ -1,0 +1,115 @@
+"""Attention compute paths: chunked vs naive, decode vs naive, MLA algebra."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.ref import naive_attention, naive_decode_attention
+from repro.models.attention import (
+    chunked_attention,
+    decode_attention,
+    mla_decode_attention,
+)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 64])
+def test_chunked_matches_naive_causal(chunk):
+    B, S, Hkv, G, D = 2, 32, 2, 3, 16
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hkv * G, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    out = chunked_attention(q, k, v, causal=True, chunk=chunk)
+    exp = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_respects_kv_lengths():
+    B, S, H, D = 2, 24, 2, 8
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    lengths = jnp.array([7, 15])
+    out = chunked_attention(q, k, v, causal=False, kv_lengths=lengths, chunk=8)
+    k2 = k.at[0, 7:].set(1e3).at[1, 15:].set(-1e3)
+    out2 = chunked_attention(q, k2, v, causal=False, kv_lengths=lengths, chunk=8)
+    np.testing.assert_allclose(out, out2, atol=1e-6)
+
+
+def test_decode_dense_matches_naive():
+    B, S, Hkv, G, D = 3, 40, 2, 4, 16
+    ks = jax.random.split(jax.random.key(2), 4)
+    q = jax.random.normal(ks[0], (B, Hkv * G, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    lengths = jnp.array([40, 17, 1])
+    out = decode_attention(q, k, v, lengths)
+    exp = naive_decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+def test_mla_absorbed_equals_expanded():
+    """Absorbed-latent decode == expand-then-attend (the MLA identity)."""
+    B, S, H, Dc, Dr, Dn = 2, 12, 3, 16, 4, 8
+    ks = jax.random.split(jax.random.key(3), 6)
+    ckv = jax.random.normal(ks[0], (B, S, Dc))
+    krope = jax.random.normal(ks[1], (B, S, Dr))
+    q_nope = jax.random.normal(ks[2], (B, H, Dn))
+    q_rope = jax.random.normal(ks[3], (B, H, Dr))
+    w_uk = jax.random.normal(ks[4], (Dc, H, Dn))
+    w_uv = jax.random.normal(ks[5], (Dc, H, Dn))
+    scale = 1.0 / math.sqrt(Dn + Dr)
+    lengths = jnp.full((B,), S, jnp.int32)
+
+    # expanded: k = ckv @ w_uk per head (+rope), v = ckv @ w_uv
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, w_uk)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :], (B, S, H, Dr))], -1
+    )
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    vf = jnp.einsum("bsr,rhk->bshk", ckv, w_uv)
+    s = jnp.einsum("bhk,bshk->bhs", qf, kf) * scale
+    p = jax.nn.softmax(s, -1)
+    expected = jnp.einsum("bhs,bshk->bhk", p, vf)
+
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+    lat = mla_decode_attention(q_lat, q_rope, ckv, krope, lengths, scale=scale)
+    got = jnp.einsum("bhr,rhn->bhn", lat, w_uv)
+    np.testing.assert_allclose(got, expected, atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    chunk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+    s=st.integers(4, 40),
+)
+def test_property_chunked_invariant_to_chunk_size(chunk, seed, s):
+    """Online softmax must be exactly chunk-size invariant (fp32)."""
+    B, H, D = 1, 2, 8
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, s, H, D))
+    k = jax.random.normal(ks[1], (B, s, H, D))
+    v = jax.random.normal(ks[2], (B, s, H, D))
+    a = chunked_attention(q, k, v, causal=True, chunk=chunk)
+    b = chunked_attention(q, k, v, causal=True, chunk=s)  # single chunk
+    np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_softmax_weights_sum_to_one(seed):
+    """Attention output lies in the convex hull of V rows (per head)."""
+    B, S, H, D = 2, 10, 2, 4
+    ks = jax.random.split(jax.random.key(seed), 2)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jnp.ones((B, S, H, D))
+    lengths = jnp.full((B,), S, jnp.int32)
+    out = decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(out, jnp.ones_like(out), atol=1e-5)

@@ -1,0 +1,126 @@
+"""core/: placement spec invariants (hypothesis), pipeline, balancer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import SHAPES, all_arch_ids, get_config
+from repro.core import balance
+from repro.core.pipeline import (
+    default_batch_axes,
+    merge_cache,
+    pipelined_step,
+    split_cache,
+)
+from repro.core.placement import POLICIES, Env, kv_rules
+from repro.models.common import resolve_spec
+
+AXES_SINGLE = {"data": 16, "model": 16}
+AXES_MULTI = {"pod": 2, "data": 16, "model": 16}
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    policy=st.sampled_from(["batch", "head", "sequence", "none"]),
+    multi=st.booleans(),
+    b=st.sampled_from([1, 2, 8, 32, 128, 256]),
+    s=st.sampled_from([128, 4096, 32768, 524288]),
+    hkv=st.sampled_from([1, 2, 8, 16, 36, 128]),
+    d=st.sampled_from([64, 128]),
+)
+def test_property_kv_spec_always_valid(policy, multi, b, s, hkv, d):
+    """Every resolved spec must divide dims exactly and never reuse a mesh
+    axis — the two conditions pjit enforces on in/out shardings."""
+    axes = AXES_MULTI if multi else AXES_SINGLE
+    shape = (b, s, hkv, d)
+    spec = resolve_spec(("kv_batch", "kv_seq", "kv_heads", "head_dim"),
+                        kv_rules(policy), axes, shape)
+    used = []
+    for i, part in enumerate(spec):
+        if part is None:
+            continue
+        names = part if isinstance(part, tuple) else (part,)
+        prod = 1
+        for a in names:
+            assert a in axes
+            used.append(a)
+            prod *= axes[a]
+        assert shape[i] % prod == 0, (spec, shape)
+    assert len(used) == len(set(used)), f"axis reused: {spec}"
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    heads=st.sampled_from([8, 16, 24, 32, 36, 56, 64, 128]),
+    dim=st.sampled_from([1024, 2048, 7168]),
+)
+def test_property_param_spec_divides(heads, dim):
+    from repro.core.placement import param_rules
+    from repro.models.common import ParamDef, resolve_param_spec
+
+    d = ParamDef((4, dim, heads, 128), ("layers", "embed", "heads", "head_dim"))
+    spec = resolve_param_spec(d, param_rules(False, True), AXES_SINGLE)
+    for i, part in enumerate(spec):
+        if part is None:
+            continue
+        names = part if isinstance(part, tuple) else (part,)
+        prod = 1
+        for a in names:
+            prod *= AXES_SINGLE[a]
+        assert d.shape[i] % prod == 0
+
+
+def test_pipeline_split_merge_roundtrip():
+    cache = {
+        "k": jnp.arange(2 * 4 * 3).reshape(2, 4, 3).astype(jnp.float32),
+        "lengths": jnp.arange(4),
+    }
+    axes = default_batch_axes(cache)
+    subs = split_cache(cache, 2, axes)
+    assert subs[0]["k"].shape == (2, 2, 3)
+    merged = merge_cache(subs, axes)
+    for k in cache:
+        np.testing.assert_array_equal(cache[k], merged[k])
+
+
+def test_pipelined_step_equals_plain_step():
+    """Sub-batch pipelining must be a pure reorganization (same numbers)."""
+    from repro.configs.reduced import reduce_config
+    from repro.models.registry import build_model
+
+    cfg = reduce_config("llama3.2-1b")
+    model = build_model(cfg, Env())
+    params = model.init(jax.random.key(0))
+    B = 4
+    toks = jax.random.randint(jax.random.key(1), (B, 8), 0, cfg.vocab)
+    cache = model.init_cache(B, 16)
+    _, cache = jax.jit(model.prefill)(params, toks, cache)
+    nxt = jnp.array([1, 2, 3, 4], jnp.int32)
+
+    log1, c1 = jax.jit(model.decode_step)(params, cache, nxt)
+    step2 = pipelined_step(model.decode_step, 2)
+    log2, c2 = jax.jit(step2)(params, cache, nxt)
+    np.testing.assert_allclose(
+        log1.astype(jnp.float32), log2.astype(jnp.float32), atol=1e-6
+    )
+    for k in c1:
+        np.testing.assert_array_equal(np.asarray(c1[k]), np.asarray(c2[k]))
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+def test_balance_plan_every_arch(arch):
+    cfg = get_config(arch)
+    p = balance.plan(cfg, SHAPES["decode_32k"], AXES_MULTI)
+    assert p.kv_policy in POLICIES
+    assert p.t_attention > 0 and p.t_linear > 0
+    assert p.kv_shards >= 1
+    # boundary transfer must be tiny relative to the cache read (the
+    # paper's core premise, §IV-B)
+    assert p.t_boundary < 0.5 * max(p.t_attention, p.t_linear)
+
+
+def test_env_no_axes_is_noop():
+    env = Env()
+    assert env.kv_spec(("kv_batch", "kv_seq"), (4, 128)) == jax.sharding.PartitionSpec()

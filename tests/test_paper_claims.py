@@ -1,0 +1,109 @@
+"""Validate the faithful reproduction against the paper's own claims.
+
+All numbers come out of ``core/oi.py`` seeded only with Table I constants
+and Llama-2-7B dimensions (DESIGN.md §7).  Tolerances are stated per
+claim; residuals trace to prototype effects (QDMA chunking) the analytic
+model does not include.
+"""
+import pytest
+
+from repro.core import oi
+from repro.core.oi import DEVICES, LLAMA2_7B as M
+
+L40S = DEVICES["L40S"]
+H100 = DEVICES["H100-NVL"]
+HPUP = DEVICES["HPU-PROTO"]
+A100 = DEVICES["A100"]
+
+SEQ_FULL = 2048          # context at end of generation
+SEQ_AVG = 1024 + 512     # input 1K + half of the 1K output
+
+
+def test_a100_crossover_batch_203():
+    """§III: GEMM turns compute-bound at batch ~ perf/BW ratio ~ 203."""
+    assert abs(A100.ridge - 203) < 4
+
+
+def test_gemv_oi_is_batch_independent():
+    assert oi.gemv_oi(1) == oi.gemv_oi(1)
+    # attention OI equals the GQA group size, never the batch
+    for g in (1, 4, 8):
+        assert oi.gemv_oi(g) == g
+
+
+def test_oom_boundary_batch_16():
+    """§VI-B: L40S serves batch 16 but OOMs at 32 (2K ctx, Llama-2-7B).
+    The paper sweeps powers of two, so the claim is 16 <= limit < 32."""
+    mb = oi.max_batch_gpu_only(L40S, M, SEQ_FULL)
+    assert 16 <= mb < 32, mb
+
+
+def test_hpu_proto_capacity_16_per_unit():
+    """§VI-B: one 16GB HPU prototype holds ~16 sequences' KV at 2K ctx."""
+    assert 13 <= oi.max_batch_per_hpu(HPUP, M, SEQ_FULL) <= 18
+
+
+@pytest.mark.parametrize(
+    "batch,expected,tol",
+    [(16, 1.9, 0.75), (32, 2.9, 0.75), (64, 4.1, 0.9)],
+)
+def test_fig7a_throughput_ratios(batch, expected, tol):
+    """Fig. 7a: GPU+4HPU at batch {16,32,64} vs GPU-only at batch 16."""
+    base = oi.step_time_gpu_only(L40S, M, 16, SEQ_AVG)
+    base_tput = 16 / base["total"]
+    het = oi.step_time_hetero(L40S, HPUP, M, batch, SEQ_AVG, n_hpu=4)
+    ratio = (batch / het["total"]) / base_tput
+    assert abs(ratio - expected) <= tol, f"model {ratio:.2f} vs paper {expected}"
+
+
+def test_fig7b_network_share_small():
+    """Fig. 7b / §VI-C: boundary-transfer share stays ~10% of step time."""
+    het = oi.step_time_hetero(L40S, HPUP, M, 64, SEQ_AVG, n_hpu=4)
+    share = het["network"] / het["total"]
+    assert share < 0.15, share
+
+
+def test_fig8_mfu_gpu_only_about_1pct():
+    t = oi.step_time_gpu_only(L40S, M, 16, SEQ_AVG)
+    mfu = oi.mfu_end_to_end(L40S, M, 16, SEQ_AVG, t)
+    assert mfu < 0.03, mfu
+
+
+def test_fig8_mfu_hetero_tens_of_pct():
+    """Fig. 8: linear-only GPU at large batch reaches tens of % MFU."""
+    t = oi.step_time_hetero(L40S, HPUP, M, 512, SEQ_AVG, n_hpu=16)
+    mfu_linear = (M.linear_flops_per_token() * 512) / (t["linear"] * L40S.flops)
+    assert mfu_linear > 0.25, mfu_linear
+
+
+def test_fig9_energy_efficiency_gain():
+    """Fig. 9: ~4.6x tokens/s/W for L40S+4HPU@64 vs L40S-only@16."""
+    base = oi.step_time_gpu_only(L40S, M, 16, SEQ_AVG)
+    het = oi.step_time_hetero(L40S, HPUP, M, 64, SEQ_AVG, n_hpu=4)
+    e_base = oi.tokens_per_joule(16, base, L40S, n_hpu=0)
+    e_het = oi.tokens_per_joule(64, het, L40S, n_hpu=4)
+    ratio = e_het / e_base
+    assert 3.2 <= ratio <= 6.0, ratio
+
+
+@pytest.mark.xfail(
+    reason="Documented deviation (EXPERIMENTS.md §Paper-validation): the "
+    "paper's 1.92x-vs-H100 result rests on measured wall power and real "
+    "kernel efficiencies; an ideal-roofline model seeded only with Table I "
+    "constants predicts the opposite ordering (H100 NVL's 3.9 TB/s serves "
+    "attention faster per watt than the 460 GB/s FPGA prototype).",
+    strict=True,
+)
+def test_fig9_beats_h100_nvl():
+    """Fig. 9: mid-range GPU + HPUs beats a high-end GPU on tokens/s/W."""
+    h100 = oi.step_time_gpu_only(H100, M, 64, SEQ_AVG)
+    het = oi.step_time_hetero(L40S, HPUP, M, 64, SEQ_AVG, n_hpu=4)
+    e_h100 = oi.tokens_per_joule(64, h100, H100, n_hpu=0)
+    e_het = oi.tokens_per_joule(64, het, L40S, n_hpu=4)
+    assert e_het > e_h100, (e_het, e_h100)
+
+
+def test_mfu_mbu_balance_at_ridge():
+    """Fig. 1c: at OI == ridge, both MFU and MBU are ~max simultaneously."""
+    mfu, mbu = oi.mfu_mbu(A100, A100.ridge)
+    assert mfu > 0.99 and mbu > 0.99

@@ -1,0 +1,125 @@
+"""Training substrate: convergence, grad-accum equivalence, schedules,
+int8 gradient compression (hypothesis properties)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ParallelConfig, RunConfig, TrainConfig
+from repro.configs.reduced import reduce_config
+from repro.core.placement import Env
+from repro.data.pipeline import DataConfig, host_batch
+from repro.models.registry import build_model
+from repro.training import compression
+from repro.training.optimizer import AdamW, make_schedule
+from repro.training.trainer import make_train_step
+
+
+def _setup(arch="llama3.2-1b", **pkw):
+    cfg = reduce_config(arch)
+    model = build_model(cfg, Env())
+    run = RunConfig(
+        model=cfg,
+        parallel=ParallelConfig(**pkw),
+        train=TrainConfig(lr=3e-3, warmup_steps=2, total_steps=50),
+    )
+    return cfg, model, make_train_step(model, run)
+
+
+def test_loss_decreases():
+    cfg, model, (init_state, train_step, _, _) = _setup()
+    state = init_state(jax.random.key(0))
+    dc = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8)
+    step = jax.jit(train_step)
+    first = last = None
+    for i in range(15):
+        b = {k: jnp.asarray(v) for k, v in host_batch(dc, i, 0, 1).items()}
+        state, m = step(state, b)
+        if i == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.2, (first, last)
+
+
+def test_grad_accum_matches_full_batch():
+    """accum=2 over the same tokens must match accum=1 closely."""
+    cfg, model, (init1, step1, _, _) = _setup(grad_accum=1)
+    _, _, (init2, step2, _, _) = _setup(grad_accum=2)
+    s1 = init1(jax.random.key(0))
+    s2 = init2(jax.random.key(0))
+    dc = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8)
+    b = {k: jnp.asarray(v) for k, v in host_batch(dc, 0, 0, 1).items()}
+    s1, m1 = jax.jit(step1)(s1, b)
+    s2, m2 = jax.jit(step2)(s2, b)
+    p1 = jax.tree.leaves(s1["params"])
+    p2 = jax.tree.leaves(s2["params"])
+    err = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) - b_.astype(jnp.float32)))) for a, b_ in zip(p1, p2))
+    assert err < 2e-2, err  # bf16 params; accum reorders reductions
+
+
+@pytest.mark.parametrize("name", ["cosine", "wsd", "const"])
+def test_schedules_shape(name):
+    tc = TrainConfig(lr=1.0, warmup_steps=10, total_steps=100, schedule=name)
+    sched = make_schedule(tc)
+    xs = jnp.arange(0, 101, dtype=jnp.float32)
+    ys = jax.vmap(sched)(xs)
+    assert float(ys[0]) == 0.0
+    assert float(ys[10]) == pytest.approx(1.0, abs=1e-5)
+    if name != "const":
+        assert float(ys[100]) <= 0.21
+    if name == "wsd":
+        # stable phase: flat at peak until 10 + 90*0.8 = 82
+        assert float(ys[50]) == pytest.approx(1.0, abs=1e-5)
+        assert float(ys[80]) == pytest.approx(1.0, abs=1e-5)
+        assert float(ys[95]) < 0.9
+
+
+def test_adamw_moves_toward_minimum():
+    tc = TrainConfig(lr=0.1, warmup_steps=1, total_steps=200, schedule="const",
+                     weight_decay=0.0)
+    opt = AdamW(tc)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}  # d/dw w^2
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.3
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3))
+def test_property_int8_compression_bounded_error(seed, scale):
+    g = jax.random.normal(jax.random.key(seed), (64,)) * scale
+    grads = {"g": g}
+    err = compression.init_error(grads)
+    out, err = compression.compress_grads(grads, err)
+    # single-step quantization error bounded by scale/127 per element
+    bound = float(jnp.max(jnp.abs(g))) / 127.0 + 1e-9
+    assert float(jnp.max(jnp.abs(out["g"] - g))) <= bound * 1.01
+
+
+def test_int8_error_feedback_unbiased_over_time():
+    """With a CONSTANT gradient, error feedback makes the running mean of
+    decompressed gradients converge to the true gradient."""
+    g = {"g": jnp.array([0.301, -0.777, 0.0031, 1.9])}
+    err = compression.init_error(g)
+    acc = jnp.zeros(4)
+    n = 200
+    for _ in range(n):
+        out, err = compression.compress_grads(g, err)
+        acc = acc + out["g"]
+    np.testing.assert_allclose(acc / n, g["g"], rtol=2e-3, atol=2e-4)
+
+
+def test_state_specs_match_state_tree():
+    cfg, model, (init_state, _, state_specs, state_shapes) = _setup()
+    env_axes = {"data": 2, "model": 2}
+    model2 = build_model(cfg, Env(axes=env_axes))
+    run = RunConfig(model=cfg, parallel=ParallelConfig(), train=TrainConfig())
+    init2, _, specs2, shapes2 = make_train_step(model2, run)
+    specs = specs2()
+    shapes = shapes2()
+    # same tree structure -> zippable at jit boundary
+    jax.tree.map(lambda a, b: None, specs, shapes)
