@@ -9,7 +9,8 @@ from repro.kernels import ops, ref
 
 
 def _time(fn, *args, n=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    # one warmup; block_until_ready handles arrays and pytrees uniformly
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(n):
         jax.block_until_ready(fn(*args))
@@ -46,6 +47,26 @@ def main(print_fn=print):
         - ref.naive_attention(q2, k2, v2))))
     print_fn(f"flash_attention_b{B}s{Sq}g{G},{t_kern:.0f},{t_ref:.0f},{err:.2e}")
 
+    # paged decode: same shapes as the dense decode row, KV scattered
+    # across a block pool and gathered through per-sequence block tables
+    bs = 64
+    MB = S // bs
+    N = 1 + B * MB
+    kp = jax.random.normal(ks[1], (N, Hkv, bs, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, Hkv, bs, D), jnp.float32)
+    tables = jnp.arange(1, N, dtype=jnp.int32).reshape(B, MB)
+    t_kern = _time(lambda: ops.paged_decode_attention(q, kp, vp, tables, lengths))
+    t_ref = _time(lambda: ref.paged_decode_attention(q, kp, vp, tables, lengths))
+    err = float(
+        jnp.max(jnp.abs(ops.paged_decode_attention(q, kp, vp, tables, lengths)
+                        - ref.paged_decode_attention(q, kp, vp, tables, lengths)))
+    )
+    print_fn(f"paged_decode_attention_b{B}s{S}g{G}bs{bs},{t_kern:.0f},{t_ref:.0f},{err:.2e}")
+
 
 def _bench_wrap(fn):
     return fn
+
+
+if __name__ == "__main__":
+    main()

@@ -78,6 +78,52 @@ def decode_attention(
     return out
 
 
+def paged_decode_attention(
+    env: Env,
+    q: jax.Array,             # (B, Hq, D)
+    k_pool: jax.Array,        # (N_blocks, Hkv, block_size, D) — kernel-native
+    v_pool: jax.Array,        # (N_blocks, Hkv, block_size, D)
+    block_tables: jax.Array,  # (B, max_blocks) int32
+    lengths: jax.Array,       # (B,)
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """One decode step against the paged block pool, in the HPU layout.
+
+    The pool's *block* axis (not the batch axis) is what the HPU lanes
+    split — a physical block lives wholly on one lane, so a sequence's
+    block-table gather fans out across whichever lanes hold its blocks
+    and the boundary traffic stays the per-token Q/K/V descriptors.
+    """
+    if env.axes and env.offload == "hpu":
+        from repro.core.placement import PAGED_KV_CACHE_AXES
+
+        q = _wsc(q, env.kv_spec(("kv_batch", "kv_heads", "head_dim"), q.shape))
+        pool_spec = env.kv_spec(PAGED_KV_CACHE_AXES, k_pool.shape)
+        k_pool = _wsc(k_pool, pool_spec)
+        v_pool = _wsc(v_pool, pool_spec)
+    if env.use_pallas:
+        from repro.kernels import ops
+
+        out = ops.paged_decode_attention(
+            q, k_pool, v_pool, block_tables, lengths, scale=scale
+        )
+    else:
+        # gather-to-contiguous oracle path: identical math to the dense
+        # decode (valid positions land at the same indices, pad is masked)
+        from repro.kernels.ref import gather_paged_cache
+
+        k = gather_paged_cache(k_pool, block_tables)
+        v = gather_paged_cache(v_pool, block_tables)
+        out = attn.decode_attention(
+            q, k, v, lengths, scale=scale,
+            acc_dtype=jnp.bfloat16 if env.bf16_combine else jnp.float32,
+        )
+    if env.axes and env.offload == "hpu":
+        out = _wsc(out, env.act_spec(("batch", "heads", "head_dim"), out.shape))
+    return out
+
+
 def mla_decode_attention(
     env: Env,
     q_latent: jax.Array,

@@ -33,12 +33,17 @@ POLICIES = ("batch", "head", "sequence", "batch_seq", "none")
 
 # logical axes used by caches / boundary tensors
 KV_CACHE_AXES = ("kv_batch", "kv_seq", "kv_heads", "head_dim")
+# paged pool leaves (kernel-native layout, heads before positions): the
+# physical block axis replaces the batch axis as the unit the HPU lanes
+# split (a block belongs to exactly one lane)
+PAGED_KV_CACHE_AXES = ("kv_blocks", "kv_heads", "kv_seq", "head_dim")
 
 
 def kv_rules(policy: str) -> dict[str, tuple[str, ...]]:
     if policy == "batch":
         return {
             "kv_batch": ("pod", "data"),
+            "kv_blocks": ("pod", "data"),  # paged pool: blocks across HPU lanes
             "kv_heads": ("model",),
             "kv_seq": (),
             "head_dim": (),
@@ -47,6 +52,7 @@ def kv_rules(policy: str) -> dict[str, tuple[str, ...]]:
     if policy == "head":
         return {
             "kv_batch": ("pod",),
+            "kv_blocks": ("pod",),
             "kv_heads": ("data", "model"),
             "kv_seq": (),
             "head_dim": (),
@@ -55,6 +61,7 @@ def kv_rules(policy: str) -> dict[str, tuple[str, ...]]:
     if policy == "sequence":
         return {
             "kv_batch": ("pod",),
+            "kv_blocks": ("data", "model"),
             "kv_heads": (),
             "kv_seq": ("data", "model"),
             "head_dim": (),
@@ -67,6 +74,7 @@ def kv_rules(policy: str) -> dict[str, tuple[str, ...]]:
         # iteration 3 on the deepseek cell.
         return {
             "kv_batch": ("pod", "data"),
+            "kv_blocks": ("pod", "data", "model"),
             "kv_seq": ("model",),
             "kv_heads": (),
             "head_dim": (),
@@ -75,6 +83,7 @@ def kv_rules(policy: str) -> dict[str, tuple[str, ...]]:
     if policy == "none":
         return {
             "kv_batch": ("pod", "data"),
+            "kv_blocks": (),
             "kv_heads": (),
             "kv_seq": (),
             "head_dim": (),

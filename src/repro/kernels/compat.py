@@ -1,0 +1,7 @@
+"""jax-version compatibility for the Pallas TPU kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 spells it TPUCompilerParams, newer versions CompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

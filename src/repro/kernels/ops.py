@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.paged_decode_attention import paged_decode_attention_pallas
 from repro.kernels.prefill_attention import flash_attention_pallas
 
 
@@ -55,6 +56,31 @@ def decode_attention(
     out = decode_attention_pallas(
         qk, kk, vk, lengths.astype(jnp.int32),
         scale=scale, block_s=block, interpret=_interpret(),
+    )
+    return out.reshape(B, Hq, D)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def paged_decode_attention(
+    q: jax.Array,             # (B, Hq, D) — model layout
+    k_pool: jax.Array,        # (N_blocks, Hkv, block_size, D) — kernel-native
+    v_pool: jax.Array,        # (N_blocks, Hkv, block_size, D)
+    block_tables: jax.Array,  # (B, max_blocks) int32
+    lengths: jax.Array,       # (B,)
+    scale: float | None = None,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    N, Hkv, bs, _ = k_pool.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    # the pool is stored kernel-native (see paged_cache_defs): only the
+    # tiny per-token q needs packing, the bandwidth-bound KV streams as-is
+    qk = q.reshape(B, Hkv, G, D)                  # pack GQA group
+    out = paged_decode_attention_pallas(
+        qk, k_pool, v_pool,
+        block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+        scale=scale, interpret=_interpret(),
     )
     return out.reshape(B, Hq, D)
 

@@ -1,0 +1,137 @@
+"""Pallas TPU paged flash-decode kernel: block-table gather via scalar
+prefetch.
+
+Same narrow-GEMM/online-softmax structure as ``decode_attention.py`` (the
+HPU's GQA-group-packed design point), but the KV cache is a pool of
+fixed-size physical blocks shared across sequences.  The per-sequence
+``block_tables`` (B, max_blocks) int32 arrive as a *scalar-prefetch*
+operand, so the BlockSpec index map — which runs ahead of the kernel body
+to program the HBM->VMEM DMAs — can translate logical block ``s`` of
+sequence ``b`` into physical pool block ``tables[b, s]``.  This is the
+TPU analogue of the HPU prototype's descriptor-driven HBM access: the
+bandwidth-bound KV stream is gathered at full rate with no materialized
+per-sequence copy.
+
+Grid: ``(B, Hkv, max_blocks)``; the block axis iterates innermost so the
+VMEM scratch accumulators carry running max/denominator per (batch, kv
+head).  Unused table entries point at physical block 0 (the engine's
+null block) — their scores are masked by ``lengths`` so the garbage they
+gather never contributes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    tables_ref,   # SMEM (B, MB) int32 — consumed by the index maps
+    lengths_ref,  # SMEM (B,)
+    q_ref,        # (1, 1, G, D)
+    k_ref,        # (1, 1, block_size, D) — physical block tables[b, s]
+    v_ref,        # (1, 1, block_size, D)
+    o_ref,        # (1, 1, G, D)
+    m_ref,        # VMEM scratch (G, 1) f32
+    l_ref,        # VMEM scratch (G, 1) f32
+    acc_ref,      # VMEM scratch (G, D) f32
+    *,
+    scale: float,
+    block_size: int,
+):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (block_size, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    length = lengths_ref[b]
+    k_pos = s * block_size + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
+    valid = k_pos < length                        # (1, block_size)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                     # (G, block_size)
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(scores - m_new)
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(
+    q: jax.Array,             # (B, Hkv, G, D) — GQA group packed into sublanes
+    k_pool: jax.Array,        # (N_blocks, Hkv, block_size, D)
+    v_pool: jax.Array,        # (N_blocks, Hkv, block_size, D)
+    block_tables: jax.Array,  # (B, max_blocks) int32, physical block ids
+    lengths: jax.Array,       # (B,) int32
+    *,
+    scale: float,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, G, D = q.shape
+    _, _, block_size, _ = k_pool.shape
+    MB = block_tables.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s, tables, lens: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, block_size, D),
+                lambda b, h, s, tables, lens: (tables[b, s], h, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_size, D),
+                lambda b, h, s, tables, lens: (tables[b, s], h, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s, tables, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, block_size=block_size
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(block_tables, lengths, q, k_pool, v_pool)

@@ -32,6 +32,34 @@ def naive_attention(
     return o.reshape(B, Sq, Hq, vf.shape[-1]).astype(q.dtype)
 
 
+def gather_paged_cache(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """(N_blocks, Hkv, block_size, D) kernel-native pool + (B, max_blocks)
+    tables -> contiguous dense-layout (B, max_blocks*block_size, Hkv, D)
+    cache, positions in logical order.  The single definition of the
+    block-table gather the non-Pallas paths rely on."""
+    N, Hkv, bs, D = pool.shape
+    B, MB = block_tables.shape
+    return jnp.swapaxes(pool[block_tables], 2, 3).reshape(B, MB * bs, Hkv, D)
+
+
+def paged_decode_attention(
+    q: jax.Array,             # (B, Hq, D)
+    k_pool: jax.Array,        # (N_blocks, Hkv, block_size, D) — kernel-native
+    v_pool: jax.Array,        # (N_blocks, Hkv, block_size, D)
+    block_tables: jax.Array,  # (B, max_blocks) int32
+    lengths: jax.Array,       # (B,)
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Oracle for the paged kernel: gather each sequence's blocks into a
+    contiguous cache, then run the dense decode oracle.  Positions beyond
+    ``lengths`` (including whatever the null block holds) are masked
+    there."""
+    k = gather_paged_cache(k_pool, block_tables)
+    v = gather_paged_cache(v_pool, block_tables)
+    return naive_decode_attention(q, k, v, lengths, scale=scale)
+
+
 def naive_decode_attention(
     q: jax.Array,
     k_cache: jax.Array,

@@ -15,21 +15,27 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def compat_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit-Auto axis types where the installed
+    jax supports them (``jax.sharding.AxisType`` arrived after 0.4.x);
+    older versions treat every axis as Auto already."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Whatever this host actually has (CPU tests / reduced runs)."""
     n = jax.device_count()
     mp = model_parallel if n % model_parallel == 0 else 1
-    return jax.make_mesh((n // mp, mp), ("data", "model"), axis_types=_auto(2))
+    return compat_mesh((n // mp, mp), ("data", "model"))
 
 
 def mesh_axes(mesh) -> dict[str, int]:

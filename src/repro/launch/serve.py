@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --requests 16 --slots 4 --max-new 12
+
+Add ``--cache paged [--block-size 16] [--blocks N]`` to serve from the
+paged block pool (admission gated on free blocks, prefix sharing,
+preemption under block pressure) instead of the dense per-slot cache.
 """
 from __future__ import annotations
 
@@ -31,6 +35,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--sub-batches", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--cache", choices=("dense", "paged"), default="dense")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged: tokens per physical KV block")
+    ap.add_argument("--blocks", type=int, default=None,
+                    help="paged: pool size incl. null block "
+                         "(default: dense-equivalent budget)")
     args = ap.parse_args()
 
     cfg = reduce_config(args.arch) if args.reduced else get_config(args.arch)
@@ -48,6 +58,7 @@ def main():
         model, params, n_slots=args.slots, max_seq=args.max_seq,
         sampler=SamplerConfig(temperature=args.temperature, top_k=40),
         sub_batches=args.sub_batches,
+        cache_kind=args.cache, block_size=args.block_size, n_blocks=args.blocks,
     )
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
@@ -63,6 +74,8 @@ def main():
           f"peak_active={stats.peak_active}")
     print(f"wall {dt:.2f}s -> {stats.generated/dt:.1f} tok/s "
           f"(batch efficiency {stats.generated/max(stats.decode_steps*args.slots,1):.0%})")
+    if args.cache == "paged":
+        print(f"pool: {eng.pool.stats} kv_bytes={eng.kv_bytes()}")
 
 
 if __name__ == "__main__":

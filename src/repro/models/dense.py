@@ -168,6 +168,101 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Pytree:
 
 
 # ---------------------------------------------------------------------------
+# paged cache (block pool + per-slot block tables; serving/paged/)
+# ---------------------------------------------------------------------------
+def paged_cache_defs(
+    cfg, n_slots: int, n_blocks: int, block_size: int, max_blocks: int
+) -> Pytree:
+    """Physical KV as a pool of fixed-size blocks shared by all slots.
+
+    ``k``/``v`` carry the *block* axis where the dense cache carries the
+    batch axis — that axis is what the HPU lanes split (placement rule
+    ``kv_blocks``).  ``block_tables`` maps (slot, logical block) ->
+    physical block; entry 0 is the engine's null block.
+
+    The pool is stored kernel-native — ``(blocks, kv_heads, block, head_
+    dim)``, heads *before* positions, unlike the dense ``(B, S, H, D)``
+    cache — so the per-layer decode attention consumes it with zero
+    relayout.  A transposed layout would materialize a full-pool copy
+    per layer per token: exactly the HBM traffic the paper's design
+    removes.
+    """
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim()
+    kv = ParamDef(
+        (L, n_blocks, Hkv, block_size, Dh),
+        ("layers", "kv_blocks", "kv_heads", "kv_seq", "head_dim"),
+        "zeros",
+    )
+    return {
+        "k": kv,
+        "v": kv,
+        "block_tables": ParamDef((n_slots, max_blocks), ("kv_batch", None), "zeros"),
+        "lengths": ParamDef((n_slots,), ("kv_batch",), "zeros"),
+    }
+
+
+def init_paged_cache(
+    cfg, n_slots: int, n_blocks: int, block_size: int, max_blocks: int,
+    dtype=jnp.bfloat16,
+) -> Pytree:
+    if cfg.kv_quant:
+        raise NotImplementedError("paged cache does not support kv_quant yet")
+    defs = paged_cache_defs(cfg, n_slots, n_blocks, block_size, max_blocks)
+    dt = {"block_tables": jnp.int32, "lengths": jnp.int32}
+    return {k: jnp.zeros(d.shape, dt.get(k, dtype)) for k, d in defs.items()}
+
+
+def paged_decode_step(cfg, env: Env, params, cache, tokens):
+    """One autoregressive step against the paged pool.
+
+    Identical math to ``decode_step``; only the KV addressing differs:
+    the new token's K/V scatter to ``(tables[b, len//bs], len % bs)`` and
+    attention gathers each sequence's blocks through its table.  Inactive
+    slots (length 0, table all-null) write to the null block and their
+    logits are ignored by the engine.
+    """
+    lengths = cache["lengths"]          # (B,) current KV counts
+    tables = cache["block_tables"]      # (B, max_blocks) int32
+    bs = cache["k"].shape[3]
+    B = tokens.shape[0]
+    x = cm.embed_lookup(params["embed"], tokens)  # (B, D)
+    pos = lengths[:, None]
+    bidx = jnp.arange(B)
+    phys = tables[bidx, lengths // bs]  # (B,) physical append block
+    off = lengths % bs
+
+    def scan_body(xc, xs):
+        p, k_l, v_l = xs                # k_l/v_l (n_blocks, Hkv, bs, Dh)
+        h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", h, p["wq"])
+        k = jnp.einsum("bd,dhk->bhk", h, p["wk"])
+        v = jnp.einsum("bd,dhk->bhk", h, p["wv"])
+        q = cm.rope(q[:, None], pos, cfg.rope_theta)[:, 0]
+        k = cm.rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+        # advanced indices (phys, off) straddle the head slice, so the
+        # selected (B, Hkv, Dh) lands batch-first — matching k/v directly
+        k_l = k_l.at[phys, :, off].set(k.astype(k_l.dtype))
+        v_l = v_l.at[phys, :, off].set(v.astype(v_l.dtype))
+        o = offload.paged_decode_attention(env, q, k_l, v_l, tables, lengths + 1)
+        xc = xc + jnp.einsum("bhk,hkd->bd", o, p["wo"])
+        h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+        xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        return xc, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        scan_body, x, (params["blocks"], cache["k"], cache["v"])
+    )
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(x, _unembed_table(params), cfg.vocab)
+    return logits, {
+        "k": k_new,
+        "v": v_new,
+        "block_tables": tables,
+        "lengths": lengths + 1,
+    }
+
+
+# ---------------------------------------------------------------------------
 # int8 KV quantization (beyond-paper: 2x cache capacity — the paper's
 # scalability axis §VI-B — at ~1e-2 relative attention error)
 # ---------------------------------------------------------------------------

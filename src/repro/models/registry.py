@@ -28,6 +28,12 @@ class Model:
     decode_step: Callable[[Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]]
     cache_defs: Callable[[int, int], Pytree]
     init_cache: Callable[[int, int], Pytree]
+    # paged-cache path (serving/paged/); None for families without one.
+    # Signatures: (n_slots, n_blocks, block_size, max_blocks) -> cache,
+    # and paged_decode_step(params, cache, tokens) -> (logits, cache).
+    paged_decode_step: Callable[[Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]] | None = None
+    paged_cache_defs: Callable[[int, int, int, int], Pytree] | None = None
+    init_paged_cache: Callable[[int, int, int, int], Pytree] | None = None
 
     # ---- derived helpers -------------------------------------------------
     def init(self, rng: jax.Array) -> Pytree:
@@ -52,6 +58,31 @@ class Model:
     def cache_shapes(self, batch: int, max_seq: int) -> Pytree:
         """ShapeDtypeStructs mirroring init_cache (no allocation)."""
         return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    def paged_cache_specs(
+        self, n_slots: int, n_blocks: int, block_size: int, max_blocks: int
+    ) -> Pytree:
+        """HPU-layout shardings for the paged pool (block axis split across
+        lanes per the ``kv_blocks`` placement rule)."""
+        from repro.core.placement import kv_rules
+
+        if self.paged_cache_defs is None:
+            raise ValueError(f"{self.cfg.family} has no paged cache")
+        policy = self.env.kv_policy if self.env.offload == "hpu" else "none"
+        return cm.specs_for(
+            self.paged_cache_defs(n_slots, n_blocks, block_size, max_blocks),
+            kv_rules(policy),
+            self.env.axes,
+        )
+
+    def paged_cache_shapes(
+        self, n_slots: int, n_blocks: int, block_size: int, max_blocks: int
+    ) -> Pytree:
+        if self.init_paged_cache is None:
+            raise ValueError(f"{self.cfg.family} has no paged cache")
+        return jax.eval_shape(
+            lambda: self.init_paged_cache(n_slots, n_blocks, block_size, max_blocks)
+        )
 
     def n_params(self) -> int:
         return cm.count_params(self.param_defs)
@@ -85,4 +116,17 @@ def build_model(cfg: ModelConfig, env: Env | None = None) -> Model:
         decode_step=functools.partial(fam.decode_step, cfg, env),
         cache_defs=functools.partial(fam.cache_defs, cfg),
         init_cache=functools.partial(fam.init_cache, cfg),
+        # families opt into paging by defining the three paged_* callables
+        paged_decode_step=(
+            functools.partial(fam.paged_decode_step, cfg, env)
+            if hasattr(fam, "paged_decode_step") else None
+        ),
+        paged_cache_defs=(
+            functools.partial(fam.paged_cache_defs, cfg)
+            if hasattr(fam, "paged_cache_defs") else None
+        ),
+        init_paged_cache=(
+            functools.partial(fam.init_paged_cache, cfg)
+            if hasattr(fam, "init_paged_cache") else None
+        ),
     )

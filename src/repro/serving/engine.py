@@ -6,6 +6,17 @@ requests are prefilled into it while decode keeps running for the rest —
 this is what keeps the decode batch (and thus the offloaded-attention
 bandwidth utilization the paper optimizes) high.
 
+Two cache modes (``cache_kind``):
+
+* ``"dense"`` — the seed baseline: every slot reserves a full
+  ``max_seq`` stripe of KV, admission is gated on free *slots*.
+* ``"paged"`` — physical KV is a :class:`~repro.serving.paged.BlockPool`
+  of fixed-size blocks; admission is gated on free *blocks* (actual HPU
+  memory), shared prompt prefixes share physical blocks (copy-on-write
+  on first divergent append), and running out of blocks preempts the
+  youngest sequence back to the queue — it re-prefills later from its
+  prompt plus the tokens already generated, so greedy output is exact.
+
 The decode step is wrapped by ``core.pipeline.pipelined_step`` when
 ``sub_batches > 1`` (paper Fig. 3), and attention runs through
 ``core.offload`` in the layout chosen by ``core.balance.plan``.
@@ -14,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +34,8 @@ import numpy as np
 from repro.core.pipeline import pipelined_step
 from repro.models.registry import Model
 from repro.serving import kv_cache
+from repro.serving.paged import BlockPool, PagedCacheManager
+from repro.serving.paged import device as paged_dev
 from repro.serving.sampler import SamplerConfig, sample
 
 Pytree = Any
@@ -44,6 +57,7 @@ class EngineStats:
     decode_steps: int = 0
     generated: int = 0
     peak_active: int = 0
+    preemptions: int = 0
 
 
 class Engine:
@@ -56,20 +70,51 @@ class Engine:
         sampler: SamplerConfig = SamplerConfig(),
         sub_batches: int = 1,
         rng: jax.Array | None = None,
+        cache_kind: str = "dense",
+        block_size: int = 16,
+        n_blocks: int | None = None,
     ):
         self.model = model
         self.params = params
         self.max_seq = max_seq
         self.sampler = sampler
-        self.cache = model.init_cache(n_slots, max_seq)
+        self.cache_kind = cache_kind
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: deque[Request] = deque()
         self.stats = EngineStats()
         self.rng = rng if rng is not None else jax.random.key(0)
 
         self._prefill = jax.jit(model.prefill)
-        step = pipelined_step(model.decode_step, sub_batches)
-        self._decode = jax.jit(step)
+        if cache_kind == "paged":
+            if model.paged_decode_step is None:
+                raise ValueError(f"{model.cfg.family} has no paged decode path")
+            if sub_batches != 1:
+                raise NotImplementedError(
+                    "paged cache does not compose with sub-batch pipelining yet"
+                )
+            self.block_size = block_size
+            self.max_blocks = -(-max_seq // block_size)
+            # default: same physical budget as the dense cache, + null block
+            self.n_blocks = (
+                n_slots * self.max_blocks + 1 if n_blocks is None else n_blocks
+            )
+            if self.n_blocks - 1 < self.max_blocks:
+                raise ValueError(
+                    f"pool of {self.n_blocks - 1} usable blocks cannot hold one "
+                    f"max_seq={max_seq} sequence ({self.max_blocks} blocks)"
+                )
+            self.pool = BlockPool(self.n_blocks, block_size)
+            self.manager = PagedCacheManager(self.pool, n_slots, self.max_blocks)
+            self.cache = model.init_paged_cache(
+                n_slots, self.n_blocks, block_size, self.max_blocks
+            )
+            self._decode = jax.jit(model.paged_decode_step)
+        elif cache_kind == "dense":
+            self.cache = model.init_cache(n_slots, max_seq)
+            step = pipelined_step(model.decode_step, sub_batches)
+            self._decode = jax.jit(step)
+        else:
+            raise ValueError(f"unknown cache_kind {cache_kind!r}")
 
     # ------------------------------------------------------------- requests
     def submit(self, req: Request):
@@ -78,32 +123,123 @@ class Engine:
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    # ----------------------------------------------------------------- step
+    def _next_rng(self) -> jax.Array:
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    # ------------------------------------------------------------ admission
     def _admit(self):
+        if self.cache_kind == "paged":
+            self._admit_paged()
+            return
         for slot in self._free_slots():
             if not self.queue:
                 break
             req = self.queue.popleft()
             prompt = jnp.asarray(req.prompt, jnp.int32)[None]
             sub_cache = self.model.init_cache(1, self.max_seq)
-            kwargs = {}
-            logits, sub_cache = self._prefill(self.params, prompt, sub_cache, **kwargs)
+            logits, sub_cache = self._prefill(self.params, prompt, sub_cache)
             self.cache = kv_cache.insert(self.cache, sub_cache, slot)
             self.slots[slot] = req
-            tok = int(sample(logits, self._next_rng(), self.sampler)[0])
-            req.out_tokens.append(tok)
-            self.stats.prefills += 1
-            self.stats.generated += 1
+            self._sample_prefill(req, logits)
 
-    def _next_rng(self) -> jax.Array:
-        self.rng, sub = jax.random.split(self.rng)
-        return sub
+    def _admit_paged(self):
+        """Admit while slots AND blocks allow; head-of-line blocks wait.
 
+        A preempted request re-enters here with its generated tokens
+        folded into the prefill, reproducing its exact decode state.
+        """
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue[0]
+            full = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.out_tokens, np.int32)]
+            )
+            # the last sampled token is input, not cache content: the KV
+            # written at admission covers full[:-1]'s context plus itself,
+            # i.e. exactly len(full) positions after prefill
+            res = self.manager.try_admit(slot, full)
+            if res is None:
+                break                       # out of blocks: wait/FCFS
+            self.queue.popleft()
+            blocks, n_cached = res
+            pad = -(-len(full) // self.block_size) * self.block_size
+            sub_cache = self.model.init_cache(1, pad)
+            logits, sub_cache = self._prefill(
+                self.params, jnp.asarray(full, jnp.int32)[None], sub_cache
+            )
+            # fill only the blocks the prefix cache didn't already hold
+            for j in range(n_cached, len(blocks)):
+                self.cache = paged_dev.write_prompt_block(
+                    self.cache, sub_cache, blocks[j], j * self.block_size
+                )
+            self.cache = paged_dev.sync_slot(
+                self.cache, slot, self.manager.tables[slot], len(full)
+            )
+            self.slots[slot] = req
+            self._sample_prefill(req, logits)
+
+    def _sample_prefill(self, req: Request, logits):
+        tok = int(sample(logits, self._next_rng(), self.sampler)[0])
+        req.out_tokens.append(tok)
+        self.stats.prefills += 1
+        self.stats.generated += 1
+
+    # ----------------------------------------------------- block management
+    def _kv_len(self, slot: int) -> int:
+        """KV positions held for ``slot`` (last sampled token not yet
+        appended — it is this step's input)."""
+        req = self.slots[slot]
+        return len(req.prompt) + len(req.out_tokens) - 1
+
+    def _preempt(self, slot: int):
+        """Evict ``slot`` to the queue front; blocks return to the pool.
+        Its tokens are preserved and recomputed at re-admission."""
+        req = self.slots[slot]
+        self.slots[slot] = None
+        self.manager.free_slot(slot)
+        self.cache = paged_dev.sync_slot(
+            self.cache, slot, self.manager.tables[slot], 0
+        )
+        self.queue.appendleft(req)
+        self.stats.preemptions += 1
+        self.pool.stats.preemptions += 1
+
+    def _prepare_append(self, active: list[int]) -> list[int]:
+        """Guarantee every active slot can write its next token: allocate
+        boundary blocks, copy-on-write shared tails, preempt the youngest
+        sequence when the pool runs dry.  Returns the surviving slots."""
+        alive = set(active)
+        for slot in sorted(active, key=lambda s: self.manager.admit_seq[s]):
+            while slot in alive:
+                directive, payload = self.manager.ensure_append(
+                    slot, self._kv_len(slot)
+                )
+                if directive == "oom":
+                    victim = self.manager.youngest(alive)
+                    self._preempt(victim)
+                    alive.discard(victim)
+                    continue                # retry (unless we evicted slot)
+                if directive == "cow":
+                    src, dst = payload
+                    self.cache = paged_dev.copy_block(self.cache, src, dst)
+                if directive in ("cow", "new"):
+                    self.cache = paged_dev.sync_slot(
+                        self.cache, slot, self.manager.tables[slot]
+                    )
+                break
+        return [s for s in active if s in alive]
+
+    # ----------------------------------------------------------------- step
     def step(self) -> bool:
         """One engine iteration: admit -> batched decode.  Returns whether
         any work remains."""
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
+        if self.cache_kind == "paged" and active:
+            active = self._prepare_append(active)
         if not active:
             return bool(self.queue)
         self.stats.peak_active = max(self.stats.peak_active, len(active))
@@ -130,7 +266,13 @@ class Engine:
             ):
                 req.done = True
                 self.slots[i] = None
-                self.cache = kv_cache.reset_slot(self.cache, i)
+                if self.cache_kind == "paged":
+                    self.manager.free_slot(i)
+                    self.cache = paged_dev.sync_slot(
+                        self.cache, i, self.manager.tables[i], 0
+                    )
+                else:
+                    self.cache = kv_cache.reset_slot(self.cache, i)
         return any(s is not None for s in self.slots) or bool(self.queue)
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
@@ -138,3 +280,8 @@ class Engine:
             if not self.step():
                 break
         return self.stats
+
+    # -------------------------------------------------------- introspection
+    def kv_bytes(self) -> int:
+        """Physical KV footprint of the resident cache (both modes)."""
+        return kv_cache.kv_bytes(self.cache)

@@ -1,0 +1,14 @@
+"""Paged KV-cache subsystem (vLLM-style, HPU-pooled).
+
+Physical KV memory is a pool of fixed-size blocks shared by every
+sequence; per-sequence block tables map logical positions to physical
+blocks.  Admission is gated on free *blocks* (actual memory) instead of
+free slots, shared prompt prefixes share physical blocks via a chain
+hash with copy-on-write on first divergence, and block exhaustion
+preempts the youngest sequence back to the queue.
+"""
+from repro.serving.paged.block_pool import BlockPool, PoolStats, chain_key
+from repro.serving.paged.manager import PagedCacheManager
+from repro.serving.paged import device
+
+__all__ = ["BlockPool", "PoolStats", "chain_key", "PagedCacheManager", "device"]

@@ -1,0 +1,113 @@
+"""Fixed-size KV block pool: free-list allocator, refcounts, prefix hashing.
+
+The paper's scaling argument (§VI) is that KV *capacity*, not compute,
+bounds large-batch decode — so physical cache memory must be a fungible
+pool, not per-slot reservations.  ``BlockPool`` manages the physical side
+of that pool entirely on the host: device arrays never move; allocation
+is bookkeeping over block ids.
+
+Conventions
+-----------
+* Block id 0 is the **null/trash block**: it is never allocated, every
+  unused block-table entry points at it, and inactive decode lanes write
+  their (ignored) K/V there.  Usable capacity is ``n_blocks - 1``.
+* A *full* block whose contents are a pure function of a token prefix is
+  registered under a chain hash ``key_j = (key_{j-1}, tokens_j)`` so a
+  later request with the same prefix reuses the physical block
+  (vLLM-style prefix caching).  Partial tail blocks register too — they
+  match only byte-identical prompts — and are invalidated the moment a
+  sequence appends to them in place (contents diverge from the key).
+* Shared blocks are copy-on-write: the *appending* sequence copies, the
+  remaining owners keep the original (see ``PagedCacheManager``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Hashable
+
+
+@dataclasses.dataclass
+class PoolStats:
+    allocs: int = 0          # fresh physical blocks handed out
+    frees: int = 0           # blocks returned to the free list
+    hash_hits: int = 0       # prefix-cache lookups that found a block
+    cow_copies: int = 0      # copy-on-write block duplications
+    preemptions: int = 0     # sequences evicted for block pressure
+    peak_in_use: int = 0
+
+
+class BlockPool:
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (1 usable + null), got {n_blocks}")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        # LIFO free list, low ids first out — keeps tests deterministic
+        self._free = list(range(n_blocks - 1, 0, -1))
+        self._ref: dict[int, int] = {}
+        self._key_to_block: dict[Hashable, int] = {}
+        self._block_to_key: dict[int, Hashable] = {}
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------- capacity
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return (self.n_blocks - 1) - len(self._free)
+
+    # ----------------------------------------------------------- allocation
+    def alloc(self) -> int:
+        """Take a free block (refcount 1).  Raises when the pool is dry —
+        callers gate on ``free_count`` and preempt instead."""
+        if not self._free:
+            raise RuntimeError("BlockPool exhausted")
+        b = self._free.pop()
+        self._ref[b] = 1
+        self.stats.allocs += 1
+        self.stats.peak_in_use = max(self.stats.peak_in_use, self.in_use)
+        return b
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def incref(self, block: int) -> None:
+        self._ref[block] += 1
+
+    def decref(self, block: int) -> None:
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            del self._ref[block]
+            self.invalidate(block)
+            self._free.append(block)
+            self.stats.frees += 1
+
+    # ------------------------------------------------------- prefix caching
+    def lookup(self, key: Hashable) -> int | None:
+        b = self._key_to_block.get(key)
+        if b is not None:
+            self.stats.hash_hits += 1
+        return b
+
+    def register(self, key: Hashable, block: int) -> None:
+        # a colliding re-register (identical content written twice) keeps
+        # the newest mapping; both directions stay consistent
+        old = self._key_to_block.get(key)
+        if old is not None:
+            self._block_to_key.pop(old, None)
+        self._key_to_block[key] = block
+        self._block_to_key[block] = key
+
+    def invalidate(self, block: int) -> None:
+        """Drop the hash entry for ``block`` (content changed or freed)."""
+        key = self._block_to_key.pop(block, None)
+        if key is not None:
+            self._key_to_block.pop(key, None)
+
+
+def chain_key(prev: Hashable, block_tokens: tuple[int, ...]) -> Hashable:
+    """Prefix-chain hash key: identifies a block by the whole token prefix
+    ending in it (tuple length distinguishes partial from full blocks)."""
+    return (prev, block_tokens)

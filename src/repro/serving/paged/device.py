@@ -1,0 +1,91 @@
+"""Jitted device ops on the physical block pool arrays.
+
+The pool K/V leaves are laid out kernel-native, ``(layers, n_blocks,
+kv_heads, block_size, head_dim)`` (``models.*.paged_cache_defs``, heads
+before positions so decode attention streams it without relayout); all
+host-side
+allocator decisions reduce to three device primitives: scatter a prefill
+slice into a block, duplicate a block (copy-on-write), and refresh one
+block-table row.  Block ids arrive as traced scalars so admission never
+recompiles.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+# the pool argument is donated: these are in-place block updates and the
+# engine always replaces its cache reference, so XLA may alias in->out
+# instead of copying the whole (L, n_blocks, ...) pool per call.  The CPU
+# backend does not implement donation and warns every compile; that
+# fallback (a copy) is exactly the pre-donation behavior, so silence it.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable"
+)
+_donate0 = functools.partial(jax.jit, donate_argnums=(0,))
+
+
+@_donate0
+def _copy_block(pool: jax.Array, src, dst) -> jax.Array:
+    return pool.at[:, dst].set(pool[:, src])
+
+
+@_donate0
+def _write_block(pool: jax.Array, sub: jax.Array, phys, start) -> jax.Array:
+    """Copy ``sub[:, 0, start:start+block_size]`` into pool block ``phys``.
+
+    The prefill sub-cache is sequence-major (L, 1, S, Hkv, Dh); one
+    block's worth is transposed to the pool's heads-major layout here —
+    a (block_size, Hkv) tile per layer, negligible next to the pool.
+    """
+    bs = pool.shape[3]
+    blk = jax.lax.dynamic_slice_in_dim(sub[:, 0], start, bs, axis=1)
+    blk = jnp.swapaxes(blk, 1, 2)                 # (L, Hkv, bs, Dh)
+    return jax.lax.dynamic_update_slice(
+        pool, blk[:, None].astype(pool.dtype), (0, phys, 0, 0, 0)
+    )
+
+
+def copy_block(cache: Pytree, src: int, dst: int) -> Pytree:
+    """COW: duplicate physical block ``src`` into ``dst`` (k and v)."""
+    return {
+        **cache,
+        "k": _copy_block(cache["k"], src, dst),
+        "v": _copy_block(cache["v"], src, dst),
+    }
+
+
+def write_prompt_block(cache: Pytree, sub_cache: Pytree, phys: int, start: int) -> Pytree:
+    """Scatter prompt KV positions ``[start, start+block_size)`` from a
+    prefill sub-cache (batch 1, seq padded to a block multiple) into
+    physical block ``phys``."""
+    return {
+        **cache,
+        "k": _write_block(cache["k"], sub_cache["k"], phys, start),
+        "v": _write_block(cache["v"], sub_cache["v"], phys, start),
+    }
+
+
+@_donate0
+def _set_row(tables: jax.Array, slot, row: jax.Array) -> jax.Array:
+    return tables.at[slot].set(row)
+
+
+def sync_slot(cache: Pytree, slot: int, row, length: int | None = None) -> Pytree:
+    """Push one host block-table row (and optionally the slot length) to
+    the device cache."""
+    out = {
+        **cache,
+        "block_tables": _set_row(
+            cache["block_tables"], slot, jnp.asarray(row, jnp.int32)
+        ),
+    }
+    if length is not None:
+        out["lengths"] = out["lengths"].at[slot].set(jnp.int32(length))
+    return out

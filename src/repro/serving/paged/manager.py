@@ -1,0 +1,151 @@
+"""Per-slot block tables over a shared :class:`BlockPool`.
+
+Host-side logical bookkeeping for the paged cache: which physical blocks
+each serving slot owns, in prompt order.  Device arrays (the block pool
+itself and the int32 ``block_tables`` the kernels read) are owned by the
+engine; the manager only decides ids and hands the engine directives
+("copy block a->b", "table row changed").
+
+Admission (``try_admit``) walks the prompt block-by-block through the
+pool's prefix hash: matched blocks are shared (incref, no KV write);
+the rest are freshly allocated and must be filled from the prefill
+pass.  Decode-time appends (``ensure_append``) allocate a block at each
+block boundary and copy-on-write a shared tail on the first divergent
+append.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.paged.block_pool import BlockPool, chain_key
+
+
+class PagedCacheManager:
+    def __init__(self, pool: BlockPool, n_slots: int, max_blocks: int):
+        self.pool = pool
+        self.n_slots = n_slots
+        self.max_blocks = max_blocks
+        self.tables = np.zeros((n_slots, max_blocks), np.int32)
+        self.blocks: list[list[int]] = [[] for _ in range(n_slots)]
+        # hash key backing each owned block (None once content diverges)
+        self.keys: list[list] = [[] for _ in range(n_slots)]
+        self.admit_seq = [-1] * n_slots   # admission order; max = youngest
+        self._counter = 0
+
+    # ------------------------------------------------------------ admission
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.pool.block_size)
+
+    def try_admit(self, slot: int, tokens: np.ndarray):
+        """Reserve blocks for ``tokens`` in ``slot``.
+
+        Returns ``(block_ids, n_cached)`` — the first ``n_cached`` blocks
+        were prefix-cache hits and already hold valid KV — or ``None``
+        when the pool cannot supply the fresh blocks (caller waits or
+        preempts).  Nothing is mutated on the ``None`` path.
+        """
+        bs = self.pool.block_size
+        need = self.blocks_for(len(tokens))
+        if need > self.max_blocks:
+            raise ValueError(f"{len(tokens)} tokens > {self.max_blocks} blocks/seq")
+        toks = [tuple(int(t) for t in tokens[j * bs:(j + 1) * bs]) for j in range(need)]
+
+        matched: list[tuple[int, object]] = []
+        key = None
+        for j in range(need):
+            key = chain_key(key, toks[j])
+            b = self.pool.lookup(key)
+            if b is None:
+                break
+            matched.append((b, key))
+        # when the prompt exactly fills its blocks the very first decode
+        # append needs a fresh block — reserve it now (not merely check),
+        # or a later admission can consume it and the new sequence gets
+        # preempted in the same step its prefill just ran
+        headroom = 1 if (len(tokens) % bs == 0 and need < self.max_blocks) else 0
+        if need - len(matched) + headroom > self.pool.free_count:
+            return None
+
+        ids, keys = [], []
+        for b, k in matched:
+            self.pool.incref(b)
+            ids.append(b)
+            keys.append(k)
+        key = matched[-1][1] if matched else None
+        for j in range(len(matched), need):
+            key = chain_key(key, toks[j])
+            b = self.pool.alloc()
+            self.pool.register(key, b)
+            ids.append(b)
+            keys.append(key)
+        if headroom:
+            # decode-only block: owned, mapped, but no prompt KV to write
+            # and never hash-registered
+            ids.append(self.pool.alloc())
+            keys.append(None)
+
+        self.blocks[slot] = ids
+        self.keys[slot] = keys
+        self.tables[slot, :] = 0
+        self.tables[slot, :len(ids)] = ids
+        self.admit_seq[slot] = self._counter
+        self._counter += 1
+        # prompt blocks only (copy: the internal list mutates later) —
+        # the caller fills blocks[n_cached:need] from the prefill pass
+        return list(ids[:need]), len(matched)
+
+    # --------------------------------------------------------------- decode
+    def ensure_append(self, slot: int, length: int):
+        """Make position ``length`` of ``slot`` writable before a decode
+        step appends there.
+
+        Returns one of::
+
+            ("ready", None)        tail block private, in-place append ok
+            ("new",   block)       fresh block mapped at the boundary
+            ("cow",   (src, dst))  shared tail duplicated; engine must
+                                   device-copy src -> dst
+            ("oom",   None)        pool dry; caller preempts and retries
+        """
+        bs = self.pool.block_size
+        idx, off = length // bs, length % bs
+        if off == 0:
+            if idx < len(self.blocks[slot]):
+                # boundary block already reserved at admission (exact-
+                # multiple prompt): private, empty, nothing to invalidate
+                return ("ready", None)
+            if self.pool.free_count == 0:
+                return ("oom", None)
+            b = self.pool.alloc()
+            self.blocks[slot].append(b)
+            self.keys[slot].append(None)
+            self.tables[slot, idx] = b
+            return ("new", b)
+        tail = self.blocks[slot][idx]
+        if self.pool.refcount(tail) > 1:
+            if self.pool.free_count == 0:
+                return ("oom", None)
+            dst = self.pool.alloc()
+            self.pool.decref(tail)   # remaining owners keep the original
+            self.blocks[slot][idx] = dst
+            self.keys[slot][idx] = None
+            self.tables[slot, idx] = dst
+            self.pool.stats.cow_copies += 1
+            return ("cow", (tail, dst))
+        # private tail: appending mutates content, so its hash entry
+        # (keyed to the old prefix) must not match future prompts
+        self.pool.invalidate(tail)
+        self.keys[slot][idx] = None
+        return ("ready", None)
+
+    # ------------------------------------------------------------- teardown
+    def free_slot(self, slot: int) -> None:
+        for b in self.blocks[slot]:
+            self.pool.decref(b)
+        self.blocks[slot] = []
+        self.keys[slot] = []
+        self.tables[slot, :] = 0
+        self.admit_seq[slot] = -1
+
+    def youngest(self, slots) -> int:
+        return max(slots, key=lambda s: self.admit_seq[s])

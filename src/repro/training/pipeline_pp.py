@@ -26,6 +26,16 @@ from jax.sharding import PartitionSpec as P
 Pytree = Any
 
 
+def _pcast_varying(x: jax.Array, axis: str) -> jax.Array:
+    """Mark ``x`` as stage-varying inside shard_map.  ``jax.lax.pcast``
+    only exists on jax versions with varying-manual-axes checking; older
+    versions treat every value as varying already, so identity is exact."""
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None:
+        return x
+    return pcast(x, (axis,), to="varying")
+
+
 def split_stages(stacked_params: Pytree, n_stages: int) -> Pytree:
     """(L, ...) stacked layer params -> (n_stages, L/n_stages, ...)."""
 
@@ -58,8 +68,8 @@ def pipeline_forward(
         stage = jax.lax.axis_index(axis)
         micro = x_local  # only stage 0 actually consumes it
         # carries become stage-varying inside the loop; mark them up front
-        buf = jax.lax.pcast(jnp.zeros_like(x_local[0]), (axis,), to="varying")
-        outs = jax.lax.pcast(jnp.zeros_like(x_local), (axis,), to="varying")
+        buf = _pcast_varying(jnp.zeros_like(x_local[0]), axis)
+        outs = _pcast_varying(jnp.zeros_like(x_local), axis)
 
         def step(t, carry):
             buf, outs = carry

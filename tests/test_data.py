@@ -1,5 +1,8 @@
 """Data pipeline: determinism + rescale-invariance of the global stream."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

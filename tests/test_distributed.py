@@ -1,6 +1,7 @@
 """Fault tolerance: straggler detection, heartbeat, elastic rescale
 (hypothesis), supervisor restart-from-checkpoint."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

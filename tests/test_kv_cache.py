@@ -1,0 +1,66 @@
+"""Direct invariants of serving/kv_cache.py (dense slot cache)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.reduced import reduce_config
+from repro.core.placement import Env
+from repro.models.registry import build_model
+from repro.serving import kv_cache
+
+
+def _model():
+    return build_model(reduce_config("llama3.2-1b"), Env())
+
+
+def test_insert_then_reset_roundtrips():
+    model = _model()
+    cache = model.init_cache(3, 16)
+    before = jax.tree.map(lambda v: np.asarray(v), cache)
+
+    sub = model.init_cache(1, 16)
+    sub = {k: jnp.full_like(v, 2 if k != "lengths" else 7) for k, v in sub.items()}
+    c2 = kv_cache.insert(cache, sub, 1)
+
+    # slot 1 took the sub-cache, neighbours untouched
+    assert float(c2["k"][:, 1].min()) == 2.0
+    assert int(c2["lengths"][1]) == 7
+    for slot in (0, 2):
+        np.testing.assert_array_equal(np.asarray(c2["k"][:, slot]), before["k"][:, slot])
+        assert int(c2["lengths"][slot]) == 0
+
+    c3 = kv_cache.reset_slot(c2, 1)
+    for k in cache:
+        np.testing.assert_array_equal(np.asarray(c3[k]), before[k])
+
+
+def test_insert_slots_independent():
+    model = _model()
+    cache = model.init_cache(2, 8)
+    sub_a = {k: jnp.full_like(v, 1) for k, v in model.init_cache(1, 8).items()}
+    sub_b = {k: jnp.full_like(v, 3) for k, v in model.init_cache(1, 8).items()}
+    c = kv_cache.insert(kv_cache.insert(cache, sub_a, 0), sub_b, 1)
+    assert float(c["v"][:, 0].max()) == 1.0
+    assert float(c["v"][:, 1].min()) == 3.0
+
+
+def test_kv_bytes_accounting():
+    model = _model()
+    cache = model.init_cache(2, 16)
+    expect = sum(v.size * v.dtype.itemsize for v in jax.tree.leaves(cache))
+    assert kv_cache.kv_bytes(cache) == expect
+    # doubling slots doubles every batch-carrying leaf
+    assert kv_cache.kv_bytes(model.init_cache(4, 16)) == 2 * expect
+
+    cfg = reduce_config("llama3.2-1b")
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim()
+    kv_leaf_bytes = 2 * L * 2 * 16 * Hkv * Dh * 2   # k+v, B=2, S=16, bf16
+    assert kv_leaf_bytes <= expect < kv_leaf_bytes + 1024
+
+
+def test_n_slots_and_batch_axis():
+    model = _model()
+    cache = model.init_cache(5, 8)
+    assert kv_cache.n_slots(cache) == 5
+    assert kv_cache.batch_axis("lengths") == 0
+    assert kv_cache.batch_axis("k") == 1
