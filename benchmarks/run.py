@@ -6,6 +6,8 @@
   fig9_energy      Fig. 9      tokens/s/W
   roofline_table   brief       3-term roofline per dry-run cell
   kernel_bench     —           Pallas kernels vs oracle (interpret mode)
+  paged_bench      —           dense vs paged KV capacity + live equivalence
+  scheduler_bench  —           decode-only vs hybrid chunked-prefill TTFT
 
 ``python -m benchmarks.run [name ...]`` — default runs everything.
 """
@@ -17,7 +19,9 @@ from benchmarks import (
     fig8_mfu,
     fig9_energy,
     kernel_bench,
+    paged_bench,
     roofline_table,
+    scheduler_bench,
 )
 
 ALL = {
@@ -27,6 +31,8 @@ ALL = {
     "fig9_energy": fig9_energy.main,
     "roofline_table": roofline_table.main,
     "kernel_bench": kernel_bench.main,
+    "paged_bench": paged_bench.main,
+    "scheduler_bench": scheduler_bench.main,
 }
 
 

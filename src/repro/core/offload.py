@@ -169,6 +169,11 @@ def prefill_attention(
 ) -> jax.Array:
     """Prefill/train attention (compute-side; flash-chunked).
 
+    ``q_offset`` (scalar, may be traced) places q[:, 0] at an absolute
+    position for chunked-prefill continuation: k/v then cover the full
+    cache window and only positions `<= q_offset + i` contribute to query
+    ``i``.  Both the Pallas kernel and the jnp path honor it.
+
     With ``env.sequence_parallel`` the q/output sequence axis is sharded
     over `model` (context parallelism): the rule set gives `seq -> model`
     and GSPMD partitions the global attention math, all-gathering the much
@@ -183,7 +188,7 @@ def prefill_attention(
     if env.use_pallas:
         from repro.kernels import ops
 
-        out = ops.flash_attention(q, k, v, causal=True)
+        out = ops.flash_attention(q, k, v, causal=True, q_offset=q_offset)
     else:
         out = attn.chunked_attention(q, k, v, causal=True, q_offset=q_offset, chunk=chunk)
     if env.axes:

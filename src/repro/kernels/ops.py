@@ -92,9 +92,13 @@ def flash_attention(
     v: jax.Array,  # (B, Sk, Hkv, D)
     scale: float | None = None,
     causal: bool = True,
+    q_offset: jax.Array | int = 0,
     block_q: int = 512,
     block_k: int = 512,
 ) -> jax.Array:
+    """``q_offset`` (traced scalar) is the absolute position of q[:, 0] —
+    chunked-prefill continuation attends a (Sq=chunk) query block against
+    a (Sk=cache) KV window without recompiling per offset."""
     B, Sq, Hq, D = q.shape
     Sk = k.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
@@ -108,7 +112,7 @@ def flash_attention(
     while Sk % bk:
         bk //= 2
     out = flash_attention_pallas(
-        qk, kk, vk, scale=scale, causal=causal,
+        qk, kk, vk, scale=scale, causal=causal, q_offset=q_offset,
         block_q=max(bq, 1), block_k=max(bk, 1), interpret=_interpret(),
     )
     return jnp.swapaxes(out, 1, 2)

@@ -7,6 +7,12 @@ so no KV replication materializes in HBM.
 Grid: (B, Hq, NQ, NK) with NK innermost; causally-skipped KV blocks
 contribute nothing (masked) — the index arithmetic keeps the common
 diagonal path hot.
+
+``q_offset`` (scalar-prefetch operand, SMEM) shifts the absolute position
+of q[:, 0] for chunked-prefill continuation: a (Sq, Sk) = (chunk, cache)
+call attends the chunk against all earlier cache positions while staying
+causal inside the chunk.  It is a traced scalar — serving one prompt at
+many offsets reuses a single compiled kernel.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
+    off_ref,  # SMEM (1,) int32 — absolute position of q[:, 0]
     q_ref,    # (1, 1, BQ, D)
     k_ref,    # (1, 1, BK, D)
     v_ref,    # (1, 1, BK, D)
@@ -41,6 +48,7 @@ def _flash_kernel(
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     n_k = pl.num_programs(3)
+    off = off_ref[0]
 
     @pl.when(ik == 0)
     def _init():
@@ -56,7 +64,7 @@ def _flash_kernel(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                                              # (BQ, BK)
         if causal:
-            q_pos = iq * block_q + jax.lax.broadcasted_iota(
+            q_pos = off + iq * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 0
             )
             k_pos = ik * block_k + jax.lax.broadcasted_iota(
@@ -76,8 +84,9 @@ def _flash_kernel(
         m_ref[...] = m_new
 
     if causal:
-        # skip fully-masked blocks (k block entirely in the future)
-        @pl.when(ik * block_k <= iq * block_q + block_q - 1)
+        # skip fully-masked blocks (k block entirely in the future);
+        # dynamic in `off` — a traced predicate, not a grid prune
+        @pl.when(ik * block_k <= off + iq * block_q + block_q - 1)
         def _():
             _compute()
     else:
@@ -96,6 +105,7 @@ def flash_attention_pallas(
     *,
     scale: float,
     causal: bool = True,
+    q_offset: jax.Array | int = 0,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
@@ -106,28 +116,38 @@ def flash_attention_pallas(
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
     assert Sq % block_q == 0 and Sk % block_k == 0
-    grid = (B, Hq, Sq // block_q, Sk // block_k)
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1)
 
-    kernel = functools.partial(
-        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k, causal=causal
-    )
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hq, Sq // block_q, Sk // block_k),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik, off: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, iq, ik, off: (b, h // G, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, iq, ik, off: (b, h // G, ik, 0)
+            ),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, iq, ik, off: (b, h, iq, 0)
+        ),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, D), jnp.float32),
         ],
+    )
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k, causal=causal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
-    )(q, k, v)
+    )(off, q, k, v)

@@ -14,8 +14,13 @@ def naive_attention(
     *,
     causal: bool = True,
     scale: float | None = None,
+    q_offset: int | None = None,
 ) -> jax.Array:
-    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D) -> (B,Sq,Hq,Dv).  fp32 softmax."""
+    """q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D) -> (B,Sq,Hq,Dv).  fp32 softmax.
+
+    ``q_offset`` places q[:, 0] at an absolute position (chunked-prefill
+    continuation); default keeps the historical right-aligned causal mask
+    (offset ``Sk - Sq``)."""
     B, Sq, Hq, D = q.shape
     _, Sk, Hkv, _ = k.shape
     G = Hq // Hkv
@@ -25,7 +30,9 @@ def naive_attention(
     vf = v.astype(jnp.float32)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
     if causal:
-        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        off = Sk - Sq if q_offset is None else q_offset
+        q_pos = off + jnp.arange(Sq, dtype=jnp.int32)[:, None]
+        mask = q_pos >= jnp.arange(Sk, dtype=jnp.int32)[None, :]
         s = jnp.where(mask[None, None, None], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)

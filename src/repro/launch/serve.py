@@ -6,6 +6,13 @@
 Add ``--cache paged [--block-size 16] [--blocks N]`` to serve from the
 paged block pool (admission gated on free blocks, prefix sharing,
 preemption under block pressure) instead of the dense per-slot cache.
+
+Add ``--schedule hybrid [--prefill-chunk 32] [--token-budget N]`` to run
+the token-budget scheduler: each iteration fuses a bucket-padded prefill
+chunk of the head-of-queue prompt into the decode batch (Sarathi-style
+chunked prefill — the paper's compute/bandwidth co-processing expressed
+as one model step), instead of whole-prompt prefills that recompile per
+prompt length and stall decode.
 """
 from __future__ import annotations
 
@@ -41,6 +48,14 @@ def main():
     ap.add_argument("--blocks", type=int, default=None,
                     help="paged: pool size incl. null block "
                          "(default: dense-equivalent budget)")
+    ap.add_argument("--schedule", choices=("decode-only", "hybrid"),
+                    default="decode-only",
+                    help="hybrid: fuse chunked prefill into decode steps")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="hybrid: max prompt tokens prefilled per step")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="hybrid: per-step token budget "
+                         "(default: slots + prefill_chunk)")
     args = ap.parse_args()
 
     cfg = reduce_config(args.arch) if args.reduced else get_config(args.arch)
@@ -59,6 +74,8 @@ def main():
         sampler=SamplerConfig(temperature=args.temperature, top_k=40),
         sub_batches=args.sub_batches,
         cache_kind=args.cache, block_size=args.block_size, n_blocks=args.blocks,
+        schedule=args.schedule, prefill_chunk=args.prefill_chunk,
+        token_budget=args.token_budget,
     )
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
@@ -70,8 +87,11 @@ def main():
     stats = eng.run()
     dt = time.time() - t0
     print(f"requests={args.requests} prefills={stats.prefills} "
-          f"decode_steps={stats.decode_steps} generated={stats.generated} "
-          f"peak_active={stats.peak_active}")
+          f"prefill_chunks={stats.prefill_chunks} "
+          f"decode_steps={stats.decode_steps} engine_steps={stats.engine_steps} "
+          f"generated={stats.generated} peak_active={stats.peak_active}")
+    print(f"latency: mean TTFT {stats.mean_ttft_steps:.1f} engine steps, "
+          f"{stats.tokens_per_step:.2f} tokens/step")
     print(f"wall {dt:.2f}s -> {stats.generated/dt:.1f} tok/s "
           f"(batch efficiency {stats.generated/max(stats.decode_steps*args.slots,1):.0%})")
     if args.cache == "paged":

@@ -53,8 +53,8 @@ def chunked_attention(
     n_chunks = Sk // chunk
 
     qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D) * scale
-    if isinstance(q_offset, int):
-        q_offset = jnp.full((B,), q_offset, jnp.int32)
+    # accept int, traced scalar, or (B,) per-sequence offsets
+    q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
     q_pos = q_offset[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]  # (B,Sq)
 
     kc = k.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, D)

@@ -349,6 +349,66 @@ def prefill(cfg, env: Env, params, tokens, cache, embeds=None):
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (Sarathi-style continuation; serving/scheduler.py)
+# ---------------------------------------------------------------------------
+def prefill_step(cfg, env: Env, params, cache, tokens, slot, q_offset, n_valid):
+    """Prefill continuation: one chunk of one slot's prompt against the
+    live cache.
+
+    ``tokens`` (1, C) is the chunk padded to a bucket size; ``slot``,
+    ``q_offset`` and ``n_valid`` are traced scalars (no recompile across
+    slots/offsets/prompt lengths — only the bucket C is a shape).  The
+    chunk's K/V are written at absolute positions ``q_offset ..
+    q_offset+C-1`` of ``slot``'s cache stripe (out-of-range pad positions
+    drop; in-range pad garbage is causally masked and overwritten by the
+    next chunk or decode append), attention runs at ``q_offset`` against
+    the stripe, and the slot length becomes ``q_offset + n_valid``.
+    Returns next-token logits (1, V) at chunk position ``n_valid - 1``
+    and the updated cache.  This is the GEMM-shaped half of a fused
+    hybrid step: one weight stream serves it and the GEMV-shaped decode
+    batch together (the paper's co-processing, on one mesh).
+    """
+    if cfg.kv_quant:
+        raise NotImplementedError("chunked prefill does not support kv_quant yet")
+    C = tokens.shape[1]
+    x = cm.embed_lookup(params["embed"], tokens)                  # (1, C, D)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    positions = q_offset + jnp.arange(C, dtype=jnp.int32)[None]   # (1, C)
+
+    def scan_body(xc, xs):
+        p, k_l, v_l = xs                   # k_l/v_l (B, S, Hkv, Dh)
+        h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, p, h)
+        q = cm.rope(q, positions, cfg.rope_theta)
+        k = cm.rope(k, positions, cfg.rope_theta)
+        k_l = k_l.at[slot, positions[0]].set(k[0].astype(k_l.dtype))
+        v_l = v_l.at[slot, positions[0]].set(v[0].astype(v_l.dtype))
+        k_row = jax.lax.dynamic_index_in_dim(k_l, slot, axis=0, keepdims=True)
+        v_row = jax.lax.dynamic_index_in_dim(v_l, slot, axis=0, keepdims=True)
+        o = offload.prefill_attention(env, q, k_row, v_row, q_offset=q_offset)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+        xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        if env.axes:
+            k_l, v_l = offload.constrain_cache(env, k_l, v_l)
+        return xc, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        scan_body, x, (params["blocks"], cache["k"], cache["v"])
+    )
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    # unembed only the last valid position (the chunk's next-token logits)
+    h_last = jax.lax.dynamic_slice(
+        x, (jnp.int32(0), jnp.asarray(n_valid, jnp.int32) - 1, jnp.int32(0)),
+        (1, 1, x.shape[-1]),
+    )[:, 0]
+    logits = cm.unembed(h_last, _unembed_table(params), cfg.vocab)
+    lengths = cache["lengths"].at[slot].set(q_offset + jnp.asarray(n_valid, jnp.int32))
+    return logits, {"k": k_new, "v": v_new, "lengths": lengths}
+
+
+# ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
 def decode_step(cfg, env: Env, params, cache, tokens):

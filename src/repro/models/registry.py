@@ -28,6 +28,12 @@ class Model:
     decode_step: Callable[[Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]]
     cache_defs: Callable[[int, int], Pytree]
     init_cache: Callable[[int, int], Pytree]
+    # chunked-prefill continuation (serving/scheduler.py hybrid steps);
+    # None for families without one.  Signature:
+    # prefill_step(params, cache, tokens, slot, q_offset, n_valid)
+    #   -> (logits, cache) — tokens (1, C) attended at absolute position
+    # q_offset against `slot`'s existing cache, K/V written at the offset.
+    prefill_step: Callable[..., tuple[jax.Array, Pytree]] | None = None
     # paged-cache path (serving/paged/); None for families without one.
     # Signatures: (n_slots, n_blocks, block_size, max_blocks) -> cache,
     # and paged_decode_step(params, cache, tokens) -> (logits, cache).
@@ -116,6 +122,11 @@ def build_model(cfg: ModelConfig, env: Env | None = None) -> Model:
         decode_step=functools.partial(fam.decode_step, cfg, env),
         cache_defs=functools.partial(fam.cache_defs, cfg),
         init_cache=functools.partial(fam.init_cache, cfg),
+        # families opt into chunked prefill by defining prefill_step
+        prefill_step=(
+            functools.partial(fam.prefill_step, cfg, env)
+            if hasattr(fam, "prefill_step") else None
+        ),
         # families opt into paging by defining the three paged_* callables
         paged_decode_step=(
             functools.partial(fam.paged_decode_step, cfg, env)

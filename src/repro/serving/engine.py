@@ -17,14 +17,31 @@ Two cache modes (``cache_kind``):
   youngest sequence back to the queue — it re-prefills later from its
   prompt plus the tokens already generated, so greedy output is exact.
 
+Two schedules (``schedule``; :mod:`repro.serving.scheduler`):
+
+* ``"decode-only"`` — whole-prompt prefill at admission (one jit program
+  per distinct prompt length), every model step is decode-only.
+* ``"hybrid"`` — a token-budget :class:`Scheduler` packs each iteration
+  as one decode token per active slot *plus* one bucket-padded chunk of
+  the head-of-queue prompt, executed as a single fused model step: the
+  chunk's GEMMs ride the decode batch's weight stream (the paper's
+  GPU/HPU co-processing, expressed as one program on one mesh), and all
+  jit shapes come from the scheduler's fixed bucket set.  Greedy outputs
+  are token-identical to ``decode-only``.  Paged sequences admit
+  partially — each chunk acquires only the blocks it needs.
+
 The decode step is wrapped by ``core.pipeline.pipelined_step`` when
 ``sub_batches > 1`` (paper Fig. 3), and attention runs through
 ``core.offload`` in the layout chosen by ``core.balance.plan``.
+
+Step accounting: ``EngineStats.engine_steps`` counts fixed-shape model
+dispatches; a decode-only whole prefill of ``L`` tokens counts
+``ceil(L / prefill_chunk)`` steps (the hybrid-batch units it occupies),
+so TTFT/throughput in steps are comparable across schedules.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Any
 
 import jax
@@ -37,6 +54,7 @@ from repro.serving import kv_cache
 from repro.serving.paged import BlockPool, PagedCacheManager
 from repro.serving.paged import device as paged_dev
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import PrefillChunk, Scheduler
 
 Pytree = Any
 
@@ -49,15 +67,33 @@ class Request:
     eos_id: int = -1                # -1: never stops early
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # latency accounting, in engine steps (-1 = not reached yet)
+    submit_step: int = 0
+    admit_step: int = -1
+    first_token_step: int = -1
+    finish_step: int = -1
 
 
 @dataclasses.dataclass
 class EngineStats:
-    prefills: int = 0
-    decode_steps: int = 0
+    prefills: int = 0               # completed request prefills
+    prefill_chunks: int = 0         # hybrid: chunks executed
+    decode_steps: int = 0           # model steps that carried a decode batch
+    engine_steps: int = 0           # normalized step clock (see module doc)
     generated: int = 0
     peak_active: int = 0
     preemptions: int = 0
+    ttft_steps_sum: int = 0
+    ttft_count: int = 0
+
+    @property
+    def mean_ttft_steps(self) -> float:
+        """Mean submit->first-token latency, in engine steps."""
+        return self.ttft_steps_sum / max(self.ttft_count, 1)
+
+    @property
+    def tokens_per_step(self) -> float:
+        return self.generated / max(self.engine_steps, 1)
 
 
 class Engine:
@@ -73,14 +109,18 @@ class Engine:
         cache_kind: str = "dense",
         block_size: int = 16,
         n_blocks: int | None = None,
+        schedule: str = "decode-only",
+        prefill_chunk: int = 32,
+        token_budget: int | None = None,
     ):
         self.model = model
         self.params = params
         self.max_seq = max_seq
         self.sampler = sampler
         self.cache_kind = cache_kind
+        self.schedule = schedule
+        self.prefill_chunk = prefill_chunk
         self.slots: list[Request | None] = [None] * n_slots
-        self.queue: deque[Request] = deque()
         self.stats = EngineStats()
         self.rng = rng if rng is not None else jax.random.key(0)
 
@@ -116,9 +156,68 @@ class Engine:
         else:
             raise ValueError(f"unknown cache_kind {cache_kind!r}")
 
+        self.sched = Scheduler(
+            n_slots=n_slots, max_seq=max_seq, mode=schedule,
+            prefill_chunk=prefill_chunk, token_budget=token_budget,
+            block_size=block_size if cache_kind == "paged" else None,
+        )
+        if schedule == "hybrid":
+            self._init_hybrid(sub_batches)
+
+    def _init_hybrid(self, sub_batches: int) -> None:
+        model = self.model
+        if model.prefill_step is None:
+            raise ValueError(
+                f"{model.cfg.family} has no prefill_step: hybrid scheduling "
+                "needs the chunked-prefill model entry point"
+            )
+        if model.cfg.kv_quant:
+            raise NotImplementedError("hybrid schedule does not support kv_quant yet")
+        if sub_batches != 1:
+            raise NotImplementedError(
+                "hybrid schedule does not compose with sub-batch pipelining yet"
+            )
+        # chunk tokens of the prompt being prefilled (set by _begin_prefill)
+        self._inflight_tokens: np.ndarray | None = None
+        self._prefix_blocks = 0
+        self._solo = jax.jit(model.prefill_step)
+        if self.cache_kind == "paged":
+            # persistent staging cache (one fixed shape): chunks accumulate
+            # here, completed blocks flush into the pool
+            self.staging = model.init_cache(1, self.max_blocks * self.block_size)
+
+            def _fused(params, cache, staging, dec_tokens, pre_tokens, off, nv):
+                pre_logits, staging = model.prefill_step(
+                    params, staging, pre_tokens, 0, off, nv
+                )
+                dec_logits, cache = model.paged_decode_step(params, cache, dec_tokens)
+                return dec_logits, pre_logits, cache, staging
+        else:
+
+            def _fused(params, cache, dec_tokens, pre_tokens, slot, off, nv):
+                pre_logits, cache = model.prefill_step(
+                    params, cache, pre_tokens, slot, off, nv
+                )
+                dec_logits, cache = model.decode_step(params, cache, dec_tokens)
+                # decode advanced every slot's length; the mid-prefill slot
+                # stays at its chunk end (its garbage append is overwritten
+                # by the next chunk / first decode token)
+                lengths = cache["lengths"].at[slot].set(off + nv)
+                return dec_logits, pre_logits, {**cache, "lengths": lengths}
+
+        self._fused = jax.jit(_fused)
+
     # ------------------------------------------------------------- requests
     def submit(self, req: Request):
-        self.queue.append(req)
+        if len(req.prompt) >= self.max_seq - 1:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens does not fit max_seq="
+                f"{self.max_seq}: admission needs len(prompt) <= max_seq - 2 "
+                "so the cache holds the prompt plus at least one generated "
+                "token without overflowing mid-decode"
+            )
+        req.submit_step = self.stats.engine_steps
+        self.sched.submit(req)
 
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -127,15 +226,31 @@ class Engine:
         self.rng, sub = jax.random.split(self.rng)
         return sub
 
-    # ------------------------------------------------------------ admission
+    @staticmethod
+    def _refold(req: Request) -> np.ndarray:
+        """Prompt plus already-generated tokens: prefilling this exactly
+        reproduces a preempted request's decode state (greedy-exact)."""
+        return np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.out_tokens, np.int32)]
+        )
+
+    # ------------------------------------------- admission (whole-prefill)
+    def _prefill_cost(self, n_tokens: int) -> int:
+        """Whole-prefill step cost, in fixed hybrid-batch units."""
+        return max(1, -(-n_tokens // self.prefill_chunk))
+
     def _admit(self):
         if self.cache_kind == "paged":
             self._admit_paged()
             return
         for slot in self._free_slots():
-            if not self.queue:
+            if not len(self.sched):
                 break
-            req = self.queue.popleft()
+            req = self.sched.pop()
+            self.stats.engine_steps += self._prefill_cost(len(req.prompt))
+            if req.admit_step < 0:
+                req.admit_step = self.stats.engine_steps
             prompt = jnp.asarray(req.prompt, jnp.int32)[None]
             sub_cache = self.model.init_cache(1, self.max_seq)
             logits, sub_cache = self._prefill(self.params, prompt, sub_cache)
@@ -150,20 +265,20 @@ class Engine:
         folded into the prefill, reproducing its exact decode state.
         """
         for slot in self._free_slots():
-            if not self.queue:
+            if not len(self.sched):
                 break
-            req = self.queue[0]
-            full = np.concatenate(
-                [np.asarray(req.prompt, np.int32),
-                 np.asarray(req.out_tokens, np.int32)]
-            )
+            req = self.sched.peek()
+            full = self._refold(req)
             # the last sampled token is input, not cache content: the KV
             # written at admission covers full[:-1]'s context plus itself,
             # i.e. exactly len(full) positions after prefill
             res = self.manager.try_admit(slot, full)
             if res is None:
                 break                       # out of blocks: wait/FCFS
-            self.queue.popleft()
+            self.sched.pop()
+            self.stats.engine_steps += self._prefill_cost(len(full))
+            if req.admit_step < 0:
+                req.admit_step = self.stats.engine_steps
             blocks, n_cached = res
             pad = -(-len(full) // self.block_size) * self.block_size
             sub_cache = self.model.init_cache(1, pad)
@@ -184,8 +299,54 @@ class Engine:
     def _sample_prefill(self, req: Request, logits):
         tok = int(sample(logits, self._next_rng(), self.sampler)[0])
         req.out_tokens.append(tok)
+        if req.first_token_step < 0:
+            req.first_token_step = self.stats.engine_steps
+            self.stats.ttft_steps_sum += req.first_token_step - req.submit_step
+            self.stats.ttft_count += 1
         self.stats.prefills += 1
         self.stats.generated += 1
+
+    # --------------------------------------------- admission (chunked/hybrid)
+    def _begin_prefill(self, req: Request, slot: int) -> tuple[int, int]:
+        """Pin ``req``'s (possibly re-folded) prompt for chunked prefill;
+        returns (first chunk position, total tokens)."""
+        full = self._refold(req)
+        self._inflight_tokens = full
+        if self.cache_kind != "paged":
+            self._prefix_blocks = 0
+            return 0, len(full)
+        bs = self.block_size
+        matched = self.manager.begin_chunked(slot, full)
+        self._prefix_blocks = len(matched)
+        for j, phys in enumerate(matched):
+            self.staging = paged_dev.read_block(self.staging, self.cache, phys, j * bs)
+        # a fully prefix-cached prompt still recomputes its last chunk for
+        # the first-token logits (pool writes for matched blocks skip)
+        start = min(len(matched) * bs, (len(full) - 1) // bs * bs)
+        return start, len(full)
+
+    def _complete_chunk(self, work: PrefillChunk, pre_logits):
+        if self.cache_kind == "paged":
+            bs = self.block_size
+            end = work.start + work.n_valid
+            for j in range(work.start // bs, (end - 1) // bs + 1):
+                if j < self._prefix_blocks:
+                    continue            # prefix-cache hit: already valid
+                self.cache = paged_dev.write_prompt_block(
+                    self.cache, self.staging, self.manager.blocks[work.slot][j],
+                    j * bs,
+                )
+        self.sched.advance(work)
+        if work.last:
+            req = work.req
+            self.slots[work.slot] = req
+            if self.cache_kind == "paged":
+                self.cache = paged_dev.sync_slot(
+                    self.cache, work.slot, self.manager.tables[work.slot],
+                    work.start + work.n_valid,
+                )
+            self._inflight_tokens = None
+            self._sample_prefill(req, pre_logits)
 
     # ----------------------------------------------------- block management
     def _kv_len(self, slot: int) -> int:
@@ -203,7 +364,7 @@ class Engine:
         self.cache = paged_dev.sync_slot(
             self.cache, slot, self.manager.tables[slot], 0
         )
-        self.queue.appendleft(req)
+        self.sched.push_front(req)
         self.stats.preemptions += 1
         self.pool.stats.preemptions += 1
 
@@ -233,26 +394,16 @@ class Engine:
         return [s for s in active if s in alive]
 
     # ----------------------------------------------------------------- step
-    def step(self) -> bool:
-        """One engine iteration: admit -> batched decode.  Returns whether
-        any work remains."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s is not None]
-        if self.cache_kind == "paged" and active:
-            active = self._prepare_append(active)
-        if not active:
-            return bool(self.queue)
-        self.stats.peak_active = max(self.stats.peak_active, len(active))
-
+    def _decode_tokens(self) -> jax.Array:
         tokens = np.zeros((len(self.slots),), np.int32)
         for i, req in enumerate(self.slots):
             if req is not None and req.out_tokens:
                 tokens[i] = req.out_tokens[-1]
-        logits, self.cache = self._decode(self.params, self.cache, jnp.asarray(tokens))
-        self.stats.decode_steps += 1
+        return jnp.asarray(tokens)
+
+    def _finish_decode(self, active: list[int], logits):
         next_toks = sample(logits, self._next_rng(), self.sampler)
         next_host = np.asarray(next_toks)
-
         for i in active:
             req = self.slots[i]
             tok = int(next_host[i])
@@ -265,6 +416,7 @@ class Engine:
                 or length >= self.max_seq - 1
             ):
                 req.done = True
+                req.finish_step = self.stats.engine_steps
                 self.slots[i] = None
                 if self.cache_kind == "paged":
                     self.manager.free_slot(i)
@@ -273,7 +425,102 @@ class Engine:
                     )
                 else:
                     self.cache = kv_cache.reset_slot(self.cache, i)
-        return any(s is not None for s in self.slots) or bool(self.queue)
+
+    def step(self) -> bool:
+        """One engine iteration.  Returns whether any work remains."""
+        if self.schedule == "hybrid":
+            return self._step_hybrid()
+        return self._step_decode_only()
+
+    def _step_decode_only(self) -> bool:
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if self.cache_kind == "paged" and active:
+            active = self._prepare_append(active)
+        if not active:
+            return self.sched.has_work()
+        self.stats.peak_active = max(self.stats.peak_active, len(active))
+
+        logits, self.cache = self._decode(
+            self.params, self.cache, self._decode_tokens()
+        )
+        self.stats.decode_steps += 1
+        self.stats.engine_steps += 1
+        self._finish_decode(active, logits)
+        return any(s is not None for s in self.slots) or self.sched.has_work()
+
+    def _step_hybrid(self) -> bool:
+        sched = self.sched
+        if sched.inflight is None and len(sched):
+            free = self._free_slots()
+            if free:
+                req = sched.pop()
+                slot = free[0]
+                start, total = self._begin_prefill(req, slot)
+                sched.begin(req, slot, start, total)
+                if req.admit_step < 0:
+                    req.admit_step = self.stats.engine_steps + 1
+
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if self.cache_kind == "paged" and active:
+            active = self._prepare_append(active)
+        decision = sched.schedule(active)
+        active = decision.decode_slots       # the scheduler owns the batch
+        work = decision.prefill
+        if work is not None and self.cache_kind == "paged":
+            ok = self.manager.extend_chunked(
+                work.slot, len(self._inflight_tokens),
+                work.start + work.n_valid, work.last,
+            )
+            if not ok:
+                work = None             # pool dry: decode-only iteration
+        if not active and work is None:
+            return sched.has_work()
+
+        self.stats.engine_steps += 1
+        self.stats.peak_active = max(self.stats.peak_active, len(active))
+        if work is not None:
+            chunk = np.zeros((1, work.bucket), np.int32)
+            chunk[0, :work.n_valid] = self._inflight_tokens[
+                work.start:work.start + work.n_valid
+            ]
+            chunk = jnp.asarray(chunk)
+            off, nv = np.int32(work.start), np.int32(work.n_valid)
+
+        dec_logits = pre_logits = None
+        if active and work is not None:
+            if self.cache_kind == "paged":
+                dec_logits, pre_logits, self.cache, self.staging = self._fused(
+                    self.params, self.cache, self.staging,
+                    self._decode_tokens(), chunk, off, nv,
+                )
+            else:
+                dec_logits, pre_logits, self.cache = self._fused(
+                    self.params, self.cache, self._decode_tokens(), chunk,
+                    np.int32(work.slot), off, nv,
+                )
+            self.stats.decode_steps += 1
+        elif active:
+            dec_logits, self.cache = self._decode(
+                self.params, self.cache, self._decode_tokens()
+            )
+            self.stats.decode_steps += 1
+        else:
+            if self.cache_kind == "paged":
+                pre_logits, self.staging = self._solo(
+                    self.params, self.staging, chunk, np.int32(0), off, nv
+                )
+            else:
+                pre_logits, self.cache = self._solo(
+                    self.params, self.cache, chunk, np.int32(work.slot), off, nv
+                )
+
+        if active:
+            self._finish_decode(active, dec_logits)
+        if work is not None:
+            self.stats.prefill_chunks += 1
+            self._complete_chunk(work, pre_logits)
+        return any(s is not None for s in self.slots) or sched.has_work()
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         for _ in range(max_steps):

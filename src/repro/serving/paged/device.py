@@ -73,6 +73,27 @@ def write_prompt_block(cache: Pytree, sub_cache: Pytree, phys: int, start: int) 
 
 
 @_donate0
+def _read_block(sub: jax.Array, pool: jax.Array, phys, start) -> jax.Array:
+    """Inverse of ``_write_block``: copy pool block ``phys`` into the
+    sequence-major staging cache at positions [start, start+block_size)."""
+    blk = jnp.swapaxes(pool[:, phys], 1, 2)[:, None]   # (L, 1, bs, Hkv, Dh)
+    return jax.lax.dynamic_update_slice(
+        sub, blk.astype(sub.dtype), (0, 0, start, 0, 0)
+    )
+
+
+def read_block(sub_cache: Pytree, cache: Pytree, phys: int, start: int) -> Pytree:
+    """Hydrate a prefill staging cache from a prefix-cache-hit block, so
+    chunked-prefill attention sees the shared prefix's K/V without
+    recomputing it."""
+    return {
+        **sub_cache,
+        "k": _read_block(sub_cache["k"], cache["k"], phys, start),
+        "v": _read_block(sub_cache["v"], cache["v"], phys, start),
+    }
+
+
+@_donate0
 def _set_row(tables: jax.Array, slot, row: jax.Array) -> jax.Array:
     return tables.at[slot].set(row)
 

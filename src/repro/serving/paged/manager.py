@@ -31,6 +31,8 @@ class PagedCacheManager:
         self.keys: list[list] = [[] for _ in range(n_slots)]
         self.admit_seq = [-1] * n_slots   # admission order; max = youngest
         self._counter = 0
+        # prompt-wide key chain for a chunked admission in progress
+        self._chunk_keys: dict[int, list] = {}
 
     # ------------------------------------------------------------ admission
     def blocks_for(self, n_tokens: int) -> int:
@@ -94,6 +96,75 @@ class PagedCacheManager:
         # the caller fills blocks[n_cached:need] from the prefill pass
         return list(ids[:need]), len(matched)
 
+    # -------------------------------------------- chunked (partial) admission
+    def begin_chunked(self, slot: int, tokens: np.ndarray) -> list[int]:
+        """Start a chunked admission: share the prefix-cache hit blocks
+        only (increfs, no allocation — cannot fail for lack of blocks);
+        fresh blocks are acquired chunk-by-chunk via
+        :meth:`extend_chunked`.  Returns the matched physical block ids
+        (their KV is already valid and must be copied into the prefill
+        staging cache)."""
+        bs = self.pool.block_size
+        need = self.blocks_for(len(tokens))
+        if need > self.max_blocks:
+            raise ValueError(f"{len(tokens)} tokens > {self.max_blocks} blocks/seq")
+        toks = [tuple(int(t) for t in tokens[j * bs:(j + 1) * bs]) for j in range(need)]
+        chain, key = [], None
+        for j in range(need):
+            key = chain_key(key, toks[j])
+            chain.append(key)
+
+        matched: list[int] = []
+        for j in range(need):
+            b = self.pool.lookup(chain[j])
+            if b is None:
+                break
+            matched.append(b)
+        for b in matched:
+            self.pool.incref(b)
+
+        self.blocks[slot] = list(matched)
+        self.keys[slot] = chain[:len(matched)]
+        self.tables[slot, :] = 0
+        self.tables[slot, :len(matched)] = matched
+        self.admit_seq[slot] = self._counter
+        self._counter += 1
+        self._chunk_keys[slot] = chain
+        return matched
+
+    def extend_chunked(self, slot: int, n_prompt: int, end: int, final: bool) -> bool:
+        """Acquire the fresh blocks one chunk needs: enough to cover
+        prompt positions ``< end``, plus the decode boundary block when
+        the *final* chunk exactly fills its blocks (the headroom
+        reservation, deferred from admission to the last chunk).  Returns
+        False (side-effect free) when the pool cannot supply them now —
+        the chunk stalls and is retried while decode keeps running."""
+        bs = self.pool.block_size
+        chain = self._chunk_keys[slot]
+        have = len(self.blocks[slot])
+        need = self.blocks_for(end)
+        headroom = 1 if (
+            final and n_prompt % bs == 0 and self.blocks_for(n_prompt) < self.max_blocks
+        ) else 0
+        fresh = max(0, need - have) + headroom
+        if fresh > self.pool.free_count:
+            return False
+        for j in range(have, need):
+            b = self.pool.alloc()
+            self.pool.register(chain[j], b)
+            self.blocks[slot].append(b)
+            self.keys[slot].append(chain[j])
+            self.tables[slot, j] = b
+        if headroom:
+            # decode-only block: owned, mapped, never hash-registered
+            b = self.pool.alloc()
+            self.blocks[slot].append(b)
+            self.keys[slot].append(None)
+            self.tables[slot, len(self.blocks[slot]) - 1] = b
+        if final:
+            self._chunk_keys.pop(slot, None)
+        return True
+
     # --------------------------------------------------------------- decode
     def ensure_append(self, slot: int, length: int):
         """Make position ``length`` of ``slot`` writable before a decode
@@ -146,6 +217,7 @@ class PagedCacheManager:
         self.keys[slot] = []
         self.tables[slot, :] = 0
         self.admit_seq[slot] = -1
+        self._chunk_keys.pop(slot, None)
 
     def youngest(self, slots) -> int:
         return max(slots, key=lambda s: self.admit_seq[s])

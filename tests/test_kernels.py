@@ -67,6 +67,21 @@ def test_flash_attention_matches_oracle(case, dtype):
     )
 
 
+@pytest.mark.parametrize("off", [0, 5, 17, 32])
+def test_flash_attention_q_offset_matches_oracle(off):
+    """Chunked-prefill continuation: a (Sq=chunk) query block at absolute
+    position `off` against a (Sk=cache) window, causal at the offset."""
+    B, Sq, Sk, Hkv, G, D = 2, 16, 48, 2, 2, 16
+    ks = jax.random.split(jax.random.key(off), 3)
+    q = _rand(ks[0], (B, Sq, Hkv * G, D), jnp.float32)
+    k = _rand(ks[1], (B, Sk, Hkv, D), jnp.float32)
+    v = _rand(ks[2], (B, Sk, Hkv, D), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, q_offset=off,
+                              block_q=8, block_k=16)
+    exp = ref.naive_attention(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(out, exp, atol=2e-6, rtol=2e-6)
+
+
 def test_decode_attention_respects_lengths():
     """Tokens beyond `lengths` must not influence the output."""
     B, S, Hkv, G, D = 2, 32, 2, 2, 16

@@ -1,0 +1,176 @@
+"""Token-budget scheduler: budget invariants (decode priority), hybrid
+chunked-prefill greedy equivalence with the whole-prefill path (dense and
+paged), bounded jit compilation across mixed prompt lengths, and
+per-request latency accounting."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.reduced import reduce_config
+from repro.core.placement import Env
+from repro.models.registry import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.scheduler import Scheduler, chunk_buckets
+
+
+def _setup():
+    cfg = reduce_config("llama3.2-1b")
+    model = build_model(cfg, Env())
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+def _serve(model, params, prompts, n_new=5, n_slots=2, max_seq=32, **kw):
+    eng = Engine(model, params, n_slots=n_slots, max_seq=max_seq, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run()
+    return reqs, stats, eng
+
+
+# ----------------------------------------------------------- pure scheduler
+def test_chunk_buckets():
+    assert chunk_buckets(32) == [32, 16, 8]
+    assert chunk_buckets(24) == [24, 12, 8]
+    assert chunk_buckets(8) == [8]
+    assert chunk_buckets(4) == [4]            # floor only clips downward
+
+
+def test_scheduler_never_exceeds_token_budget():
+    sched = Scheduler(n_slots=4, max_seq=64, mode="hybrid",
+                      prefill_chunk=16, token_budget=18)
+    sched.submit("req")
+    sched.begin(sched.pop(), slot=0, start=0, total=37)
+    seen = 0
+    for active in ([0, 1, 2, 3], [0, 1, 2, 3], [1, 3], []):
+        if sched.inflight is None:
+            break
+        d = sched.schedule(list(active))
+        assert d.tokens_packed() <= sched.token_budget
+        assert d.decode_slots == list(active)     # every active slot decodes
+        if d.prefill is not None:
+            assert d.prefill.n_valid <= sched.prefill_chunk
+            assert d.prefill.bucket in sched.buckets
+            assert d.prefill.n_valid <= d.prefill.bucket
+            seen += d.prefill.n_valid
+            sched.advance(d.prefill)
+    assert seen > 0
+
+
+def test_scheduler_decode_slots_take_priority():
+    # budget exactly covers the decode batch: no room for prefill
+    sched = Scheduler(n_slots=4, max_seq=64, mode="hybrid",
+                      prefill_chunk=16, token_budget=4)
+    sched.begin("req", slot=0, start=0, total=20)
+    d = sched.schedule([0, 1, 2, 3])
+    assert d.prefill is None and d.decode_slots == [0, 1, 2, 3]
+    # slots drain -> leftover budget funds the chunk again
+    d = sched.schedule([0])
+    assert d.prefill is not None and d.tokens_packed() <= 4
+
+
+def test_scheduler_budget_must_cover_decode_batch():
+    with pytest.raises(ValueError):
+        Scheduler(n_slots=4, max_seq=64, mode="hybrid",
+                  prefill_chunk=8, token_budget=3)
+
+
+def test_scheduler_paged_chunks_end_on_block_boundaries():
+    sched = Scheduler(n_slots=2, max_seq=64, mode="hybrid",
+                      prefill_chunk=16, block_size=8)
+    sched.begin("req", slot=0, start=0, total=21)
+    ends = []
+    while sched.inflight is not None:
+        w = sched.schedule([0, 1]).prefill
+        assert w is not None
+        ends.append(w.start + w.n_valid)
+        sched.advance(w)
+    assert ends == [16, 21]                   # block-aligned, final partial
+    with pytest.raises(ValueError):           # chunk must be a block multiple
+        Scheduler(n_slots=2, max_seq=64, mode="hybrid",
+                  prefill_chunk=12, block_size=8)
+
+
+# ------------------------------------------------------ engine equivalence
+PROMPTS = [np.arange(1, 6, dtype=np.int32),
+           np.arange(7, 10, dtype=np.int32),
+           np.arange(2, 13, dtype=np.int32),
+           np.arange(4, 25, dtype=np.int32)]     # 21 tokens: multi-chunk
+
+
+def test_hybrid_matches_decode_only_dense():
+    model, params = _setup()
+    d, _, _ = _serve(model, params, PROMPTS)
+    h, hs, _ = _serve(model, params, PROMPTS, schedule="hybrid", prefill_chunk=8)
+    for a, b in zip(d, h):
+        assert b.done
+        assert a.out_tokens == b.out_tokens, (a.uid, a.out_tokens, b.out_tokens)
+    assert hs.prefill_chunks > hs.prefills       # chunking actually happened
+
+
+def test_hybrid_matches_decode_only_paged():
+    model, params = _setup()
+    shared = np.arange(2, 13, dtype=np.int32)
+    prompts = [np.arange(1, 6, dtype=np.int32),
+               shared, shared,                       # prefix sharing
+               np.arange(1, 17, dtype=np.int32),     # exact block multiple
+               np.arange(4, 25, dtype=np.int32)]
+    d, _, _ = _serve(model, params, prompts)
+    p, _, eng = _serve(model, params, prompts, cache_kind="paged",
+                       block_size=8, schedule="hybrid", prefill_chunk=8)
+    for a, b in zip(d, p):
+        assert b.done
+        assert a.out_tokens == b.out_tokens, (a.uid, a.out_tokens, b.out_tokens)
+    assert eng.pool.stats.hash_hits >= 1             # prefix cache exercised
+    assert eng.pool.in_use == 0                      # all blocks returned
+
+
+def test_hybrid_paged_preemption_restores_exact_tokens():
+    model, params = _setup()
+    prompts = [np.arange(1, 10, dtype=np.int32),
+               np.arange(3, 8, dtype=np.int32)]
+    d, _, _ = _serve(model, params, prompts, n_new=10)
+    p, ps, eng = _serve(model, params, prompts, n_new=10, cache_kind="paged",
+                        block_size=4, n_blocks=9, schedule="hybrid",
+                        prefill_chunk=8)
+    assert ps.preemptions >= 1
+    for a, b in zip(d, p):
+        assert a.out_tokens == b.out_tokens, (a.uid, a.out_tokens, b.out_tokens)
+    assert eng.pool.in_use == 0
+
+
+# ------------------------------------------------------------- compilation
+def test_hybrid_compiles_within_bucket_set():
+    """Serving >= 4 distinct prompt lengths must not compile more hybrid
+    programs than the fixed bucket set allows (the decode-only path would
+    compile one whole-prefill program per distinct length)."""
+    model, params = _setup()
+    lens = [5, 9, 13, 21, 27]
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, model.cfg.vocab, size=n).astype(np.int32)
+               for n in lens]
+    _, _, eng = _serve(model, params, prompts, max_seq=64,
+                       schedule="hybrid", prefill_chunk=16)
+    n_buckets = len(eng.sched.buckets)
+    assert eng._fused._cache_size() <= n_buckets
+    assert eng._solo._cache_size() <= n_buckets
+    # decode: one fixed shape regardless of the length mix
+    assert eng._decode._cache_size() == 1
+
+
+# ------------------------------------------------------ latency accounting
+def test_latency_accounting_monotone():
+    model, params = _setup()
+    hybrid, h_stats, _ = _serve(model, params, PROMPTS, schedule="hybrid",
+                                prefill_chunk=8)
+    decode_only, d_stats, _ = _serve(model, params, PROMPTS)
+    for reqs, stats in ((hybrid, h_stats), (decode_only, d_stats)):
+        for r in reqs:
+            assert 0 <= r.submit_step <= r.admit_step
+            assert r.admit_step <= r.first_token_step <= r.finish_step
+        assert stats.ttft_count == len(PROMPTS)
+        assert stats.mean_ttft_steps > 0
+        assert stats.tokens_per_step > 0
+        assert stats.engine_steps > 0

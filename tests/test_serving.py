@@ -3,6 +3,7 @@ per-request reference decode produces (greedy)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.reduced import reduce_config
 from repro.core.placement import Env
@@ -59,6 +60,25 @@ def test_engine_eos_stops_early():
     eng.submit(r)
     eng.run()
     assert r.out_tokens == ref[:3]
+
+
+def test_submit_rejects_prompts_that_overflow_cache():
+    """A prompt with len >= max_seq - 1 silently overflowed the KV cache
+    mid-decode (the first generated token's K/V has no position to land
+    in); submit must reject it up front with a clear error."""
+    cfg = reduce_config("llama3.2-1b")
+    model = build_model(cfg, Env())
+    params = model.init(jax.random.key(0))
+    eng = Engine(model, params, n_slots=1, max_seq=16)
+    for plen in (15, 16, 20):              # max_seq - 1 and beyond
+        with pytest.raises(ValueError, match="max_seq"):
+            eng.submit(Request(uid=0, prompt=np.arange(plen, dtype=np.int32),
+                               max_new_tokens=4))
+    # the largest admissible prompt still round-trips
+    r = Request(uid=1, prompt=np.arange(1, 15, dtype=np.int32), max_new_tokens=4)
+    eng.submit(r)
+    eng.run()
+    assert r.done and len(r.out_tokens) >= 1
 
 
 def test_slot_insert_reset_roundtrip():
