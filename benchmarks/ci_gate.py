@@ -1,0 +1,112 @@
+"""CI bench-regression gate.
+
+Runs the benchmark harness in smoke mode (``benchmarks/run.py --smoke``),
+writes the gated metrics to ``BENCH_ci.json`` (uploaded as a CI
+artifact, so the repo finally records a perf trajectory), and compares
+them against the committed ``benchmarks/baseline.json``:
+
+* ``tokens_per_step`` — hybrid-schedule decode throughput in engine
+  steps (deterministic step accounting, machine-independent);
+* ``mean_ttft_steps`` — hybrid mean submit->first-token latency in
+  engine steps (deterministic);
+* ``async_speedup`` — async/sync wall-clock decode ratio (a *ratio* of
+  two runs on the same machine, so it transfers across CI runners where
+  absolute tokens/s would not).
+
+A metric regressing past ``--tolerance`` (default ±25%) — or any
+sub-bench raising — fails the job.  ``--update`` rewrites the baseline
+from the current run instead of gating (commit the result).
+
+  PYTHONPATH=src python -m benchmarks.ci_gate [--update] [--tolerance 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from benchmarks import run as bench_run
+
+# metric -> (direction that counts as an improvement, tolerance multiplier).
+# tokens_per_step and mean_ttft_steps are deterministic engine-step counts
+# and get the plain tolerance; async_speedup is a wall-clock ratio from a
+# short smoke run on a shared runner, so it gets double the slack — it
+# only trips when async has genuinely lost its edge over sync, not when a
+# noisy timing window shaves a few percent.
+GATED = {
+    "tokens_per_step": ("higher", 1.0),
+    "mean_ttft_steps": ("lower", 1.0),
+    "async_speedup": ("higher", 2.0),
+}
+
+
+def gate(metrics: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Return human-readable failure lines for regressed metrics."""
+    problems = []
+    for key, (direction, slack) in GATED.items():
+        base, cur = baseline.get(key), metrics.get(key)
+        tol = tolerance * slack
+        if base is None or cur is None:
+            problems.append(f"{key}: missing (baseline={base}, current={cur})")
+            continue
+        if direction == "higher":
+            floor = base * (1 - tol)
+            if cur < floor:
+                problems.append(
+                    f"{key}: {cur:.3f} regressed below {floor:.3f} "
+                    f"(baseline {base:.3f} - {tol:.0%})"
+                )
+        else:
+            ceil = base * (1 + tol)
+            if cur > ceil:
+                problems.append(
+                    f"{key}: {cur:.3f} regressed above {ceil:.3f} "
+                    f"(baseline {base:.3f} + {tol:.0%})"
+                )
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    here = Path(__file__).resolve().parent
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(here / "baseline.json"))
+    ap.add_argument("--out", default="BENCH_ci.json")
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this run instead of gating")
+    args = ap.parse_args(argv)
+
+    all_metrics, failures = bench_run.run_benches(list(bench_run.ALL), smoke=True)
+    metrics = dict(all_metrics.get("scheduler_bench", {}))
+
+    report = {"metrics": metrics, "bench_failures": failures}
+    Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+    print(f"\nwrote {args.out}: {json.dumps(metrics)}")
+
+    if args.update:
+        Path(args.baseline).write_text(json.dumps(metrics, indent=2) + "\n")
+        print(f"baseline updated: {args.baseline}")
+        return 1 if failures else 0
+
+    if failures:
+        print(f"bench failures: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    try:
+        baseline = json.loads(Path(args.baseline).read_text())
+    except FileNotFoundError:
+        print(f"no baseline at {args.baseline}; run with --update first",
+              file=sys.stderr)
+        return 1
+    problems = gate(metrics, baseline, args.tolerance)
+    if problems:
+        print("BENCH REGRESSION:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(f"bench gate OK (tolerance ±{args.tolerance:.0%} vs {args.baseline})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

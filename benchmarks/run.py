@@ -7,11 +7,20 @@
   roofline_table   brief       3-term roofline per dry-run cell
   kernel_bench     —           Pallas kernels vs oracle (interpret mode)
   paged_bench      —           dense vs paged KV capacity + live equivalence
-  scheduler_bench  —           decode-only vs hybrid chunked-prefill TTFT
+  scheduler_bench  —           decode-only vs hybrid TTFT, sync vs async
 
-``python -m benchmarks.run [name ...]`` — default runs everything.
+``python -m benchmarks.run [--smoke] [name ...]`` — default runs
+everything.  ``--smoke`` passes the down-sized CI workload to benches
+that support it.  Every named bench runs even if an earlier one fails;
+any failure makes the process exit nonzero (the CI bench gate depends on
+that), and :func:`main` returns whatever metrics dicts the benches
+produced (``benchmarks/ci_gate.py`` consumes them).
 """
+from __future__ import annotations
+
+import inspect
 import sys
+import traceback
 
 from benchmarks import (
     fig1_roofline,
@@ -36,11 +45,47 @@ ALL = {
 }
 
 
-def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+def run_benches(names: list[str], smoke: bool = False) -> tuple[dict, list[str]]:
+    """Run the named benches; every one runs even if an earlier one
+    fails.  Returns ({name: metrics-dict}, [failed names])."""
+    metrics: dict = {}
+    failures: list[str] = []
     for name in names:
         print(f"\n==== {name} ====")
-        ALL[name]()
+        fn = ALL.get(name)
+        if fn is None:
+            print(f"unknown bench {name!r} (known: {', '.join(ALL)})",
+                  file=sys.stderr)
+            failures.append(name)
+            continue
+        kwargs = {}
+        if smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
+        try:
+            result = fn(**kwargs)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            continue
+        if isinstance(result, dict):
+            metrics[name] = result
+    return metrics, failures
+
+
+def main(argv: list[str] | None = None) -> dict:
+    """Run the named benches (all by default); return {name: metrics}.
+
+    Raises ``SystemExit(1)`` after running everything if any bench
+    raised — a sub-bench failure must not leave the harness exiting 0.
+    """
+    argv = list(sys.argv[1:] if argv is None else argv)
+    smoke = "--smoke" in argv
+    names = [a for a in argv if not a.startswith("--")] or list(ALL)
+    metrics, failures = run_benches(names, smoke)
+    if failures:
+        print(f"\nFAILED benches: {', '.join(failures)}", file=sys.stderr)
+        raise SystemExit(1)
+    return metrics
 
 
 if __name__ == "__main__":

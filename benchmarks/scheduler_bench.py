@@ -1,4 +1,5 @@
-"""Decode-only whole-prefill vs hybrid chunked-prefill scheduling.
+"""Decode-only whole-prefill vs hybrid chunked-prefill scheduling, and
+synchronous vs async (dispatch-ahead) engine execution.
 
 The paper's co-processing keeps dense GEMMs and GEMV-shaped decode
 attention busy at the same time; the serving-layer analogue is the
@@ -15,8 +16,19 @@ reports, per mode:
   one solo program per chunk bucket, no matter how many distinct prompt
   lengths arrive, while decode-only compiles one prefill per length.
 
+A second section serves a decode-heavy workload at batch >= 8 with the
+engine's synchronous mode (block on logits, sample on host) vs the async
+dispatch-ahead pipeline (on-device sampling, token feedback
+device-to-device, iteration *t+1* dispatched before *t* is observed) and
+reports the wall-clock decode-throughput ratio.  Compilation is excluded
+by warming each engine on the same prompt-length set first.
+
 Asserts greedy outputs are token-identical across schedules (dense and
-paged) and that hybrid's mean TTFT beats decode-only's at mixed lengths.
+paged) and across sync/async, and that hybrid's mean TTFT beats
+decode-only's at mixed lengths.
+
+``main`` returns a metrics dict (tokens/step, mean TTFT, async speedup)
+consumed by ``benchmarks/ci_gate.py``.
 
 ``--smoke`` runs a down-sized workload for CI.
 """
@@ -67,7 +79,57 @@ def _row(name, stats, wall, print_fn):
     )
 
 
-def main(print_fn=print, smoke: bool = False):
+def async_compare(model, params, print_fn=print, smoke: bool = False) -> float:
+    """Sync vs async decode throughput at batch >= 8; returns the
+    async/sync tokens-per-second ratio (compile time excluded)."""
+    cfg = model.cfg
+    n_slots = 8
+    # even the smoke workload decodes a few hundred tokens per mode: the
+    # gated ratio needs walls well clear of timer noise
+    max_new = 24 if smoke else 32
+    rng = np.random.default_rng(1)
+    lens = [int(rng.integers(4, 10)) for _ in range(12 if smoke else 16)]
+    prompts = [rng.integers(1, cfg.vocab, size=n).astype(np.int32) for n in lens]
+
+    def timed(async_mode):
+        eng = Engine(model, params, n_slots=n_slots, max_seq=MAX_SEQ,
+                     async_mode=async_mode)
+        # warmup pass covers every jit shape (same prompt-length set)
+        warm = [Request(uid=1000 + i, prompt=p, max_new_tokens=2)
+                for i, p in enumerate(prompts)]
+        for r in warm:
+            eng.submit(r)
+        eng.run()
+        warm_generated = eng.stats.generated
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run()
+        wall = time.perf_counter() - t0
+        generated = eng.stats.generated - warm_generated
+        return reqs, generated / wall, wall
+
+    s_reqs, s_rate, s_wall = timed(async_mode=False)
+    a_reqs, a_rate, a_wall = timed(async_mode=True)
+    assert all(a.out_tokens == b.out_tokens for a, b in zip(s_reqs, a_reqs)), \
+        "async engine diverged from sync (greedy)"
+    ratio = a_rate / s_rate
+    print_fn("mode,batch,decode_tok_per_s,wall_s")
+    print_fn(f"sync,{n_slots},{s_rate:.1f},{s_wall:.2f}")
+    print_fn(f"async,{n_slots},{a_rate:.1f},{a_wall:.2f}")
+    print_fn(f"# async dispatch-ahead speedup: {ratio:.2f}x "
+             f"(on-device sampling, one-step dispatch-ahead)")
+    if not smoke:
+        assert ratio >= 1.15, (
+            f"async decode speedup {ratio:.2f}x below the 1.15x floor at "
+            f"batch {n_slots}"
+        )
+    return ratio
+
+
+def main(print_fn=print, smoke: bool = False) -> dict:
     cfg = reduce_config("llama3.2-1b")
     model = build_model(cfg, Env())
     params = model.init(jax.random.key(0))
@@ -110,6 +172,14 @@ def main(print_fn=print, smoke: bool = False):
              f"{d_stats.mean_ttft_steps / h_stats.mean_ttft_steps:.2f}x, "
              f"throughput gain: "
              f"{h_stats.tokens_per_step / d_stats.tokens_per_step:.2f}x (in steps)")
+
+    print_fn("\n# sync vs async engine: decode-heavy workload, 8 slots")
+    speedup = async_compare(model, params, print_fn, smoke)
+    return {
+        "tokens_per_step": h_stats.tokens_per_step,
+        "mean_ttft_steps": h_stats.mean_ttft_steps,
+        "async_speedup": speedup,
+    }
 
 
 if __name__ == "__main__":

@@ -18,7 +18,6 @@ Validated against ``cost_analysis()`` on loop-free graphs in the tests.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from collections import defaultdict
 

@@ -13,7 +13,7 @@ import dataclasses
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.oi import BYTES_PER_EL, DEVICES, Device
-from repro.core.placement import POLICIES, kv_rules, lanes
+from repro.core.placement import kv_rules, lanes
 from repro.models.common import resolve_spec
 
 

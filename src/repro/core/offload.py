@@ -21,7 +21,6 @@ baseline of the paper's evaluation).
 """
 from __future__ import annotations
 
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

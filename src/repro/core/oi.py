@@ -16,7 +16,6 @@ Calibration constants (documented, not fitted per-figure):
 from __future__ import annotations
 
 import dataclasses
-import math
 
 # ---------------------------------------------------------------------------
 # Table I (+ A100 from §III, + TPU v5e target from the brief)

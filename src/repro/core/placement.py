@@ -23,7 +23,6 @@ would over-pad.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any
 
 from jax.sharding import PartitionSpec as P
 

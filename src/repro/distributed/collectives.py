@@ -9,7 +9,6 @@ ring-reduce chunking; the local widening is free).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

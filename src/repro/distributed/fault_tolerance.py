@@ -8,7 +8,6 @@ mesh, and (c) keep the global data order.  The pieces here are pure logic
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from collections import deque
 from typing import Callable

@@ -21,18 +21,16 @@ Usage:
   python -m repro.launch.dryrun --all --mesh both --out results/dryrun
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis import hlo_cost
-from repro.analysis.roofline import model_flops, roofline
+from repro.analysis.roofline import roofline
 from repro.configs import SHAPES, all_arch_ids, get_config, shapes_for
 from repro.configs.base import ParallelConfig, RunConfig, TrainConfig
 from repro.core import balance
@@ -139,7 +137,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, args):
             emb_sh = NamedSharding(mesh, env.act_spec(("batch", None, None), embeds.shape))
             in_shard.append(emb_sh)
             lower_args.append(embeds)
-            fn = lambda p, t, c, e: model.prefill(p, t, c, embeds=e)
+            def fn(p, t, c, e):
+                return model.prefill(p, t, c, embeds=e)
         logits_sh = NamedSharding(
             mesh, env.act_spec(("batch", "vocab"), (shape.global_batch, cfg.padded_vocab()))
         )

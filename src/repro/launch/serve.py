@@ -13,6 +13,14 @@ chunk of the head-of-queue prompt into the decode batch (Sarathi-style
 chunked prefill — the paper's compute/bandwidth co-processing expressed
 as one model step), instead of whole-prompt prefills that recompile per
 prompt length and stall decode.
+
+``--async on`` (the default) runs the dispatch-ahead pipeline: sampling
+happens on device inside the fused step and iteration *t+1* is
+dispatched before *t*'s tokens are observed, so the device never idles
+on the host round-trip.  ``--async off`` is the conservative synchronous
+fallback (greedy outputs are token-identical either way).  Sampling is
+picked with ``--sample {greedy,temperature,top-k}`` plus
+``--temperature`` / ``--top-k`` values.
 """
 from __future__ import annotations
 
@@ -41,7 +49,21 @@ def main():
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--sub-batches", type=int, default=1)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--async", dest="async_mode", choices=("on", "off"),
+                    default="on",
+                    help="on: dispatch-ahead pipeline with on-device "
+                         "sampling; off: synchronous fallback (greedy "
+                         "token-identical)")
+    ap.add_argument("--sample", choices=("greedy", "temperature", "top-k"),
+                    default=None,
+                    help="sampling mode (temperature/top-k use the values "
+                         "of --temperature / --top-k); default: greedy, or "
+                         "top-k when --temperature > 0 is passed")
+    ap.add_argument("--temperature", type=float, default=None,
+                    help="softmax temperature (default 1.0 when --sample "
+                         "temperature/top-k is given, else greedy)")
+    ap.add_argument("--top-k", type=int, default=40,
+                    help="top-k truncation for --sample top-k")
     ap.add_argument("--cache", choices=("dense", "paged"), default="dense")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged: tokens per physical KV block")
@@ -69,13 +91,27 @@ def main():
     model = build_model(cfg, env)
     params = model.init(jax.random.key(0))
 
+    mode = args.sample
+    if mode is None:
+        # pre---sample behavior: a bare --temperature > 0 meant top-40
+        mode = "greedy" if not args.temperature else "top-k"
+    if mode == "greedy":
+        sampler = SamplerConfig()
+    else:
+        # an explicit sampling mode must actually sample: temperature 0
+        # would silently degrade to greedy (both samplers branch on it)
+        temp = args.temperature if args.temperature else 1.0
+        sampler = SamplerConfig(
+            temperature=temp, top_k=args.top_k if mode == "top-k" else 0
+        )
     eng = Engine(
         model, params, n_slots=args.slots, max_seq=args.max_seq,
-        sampler=SamplerConfig(temperature=args.temperature, top_k=40),
+        sampler=sampler,
         sub_batches=args.sub_batches,
         cache_kind=args.cache, block_size=args.block_size, n_blocks=args.blocks,
         schedule=args.schedule, prefill_chunk=args.prefill_chunk,
         token_budget=args.token_budget,
+        async_mode=args.async_mode == "on",
     )
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
@@ -86,6 +122,8 @@ def main():
     t0 = time.time()
     stats = eng.run()
     dt = time.time() - t0
+    print(f"mode: async={args.async_mode} sample={mode} "
+          f"(T={sampler.temperature} top_k={sampler.top_k})")
     print(f"requests={args.requests} prefills={stats.prefills} "
           f"prefill_chunks={stats.prefill_chunks} "
           f"decode_steps={stats.decode_steps} engine_steps={stats.engine_steps} "

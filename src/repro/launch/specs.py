@@ -12,7 +12,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.placement import Env

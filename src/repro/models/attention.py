@@ -14,7 +14,6 @@ Decode: Sq == 1, caches carry per-sequence valid ``lengths``.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

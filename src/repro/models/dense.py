@@ -22,6 +22,7 @@ from repro.core import offload
 from repro.core.placement import Env
 from repro.models import common as cm
 from repro.models.common import ParamDef
+from repro.serving.sampler import sample_on_device
 
 Pytree = Any
 
@@ -470,3 +471,36 @@ def decode_step(cfg, env: Env, params, cache, tokens):
         new_cache["k_scale"] = ks_new
         new_cache["v_scale"] = vs_new
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sampled steps (async engine): tokens in -> sampled tokens out, on device
+# ---------------------------------------------------------------------------
+# The async engine never reads logits on the host: each step returns the
+# sampled next-token ids plus a per-slot EOS hit flag, so only [batch]
+# ints cross the host boundary and the next step's inputs can be fed back
+# device-to-device (serving/engine.py dispatch-ahead pipeline).  ``rng``
+# is a traced key (unused for greedy); ``eos_ids`` is a per-slot int32
+# vector (-1 = never stops); ``sampler`` must be static under jit.
+
+def decode_sample_step(cfg, env: Env, params, cache, tokens, rng, eos_ids, *, sampler):
+    """One decode step with sampling fused: (tokens', eos_hit, cache)."""
+    logits, cache = decode_step(cfg, env, params, cache, tokens)
+    tok = sample_on_device(logits, rng, sampler)
+    return tok, tok == eos_ids, cache
+
+
+def paged_decode_sample_step(cfg, env: Env, params, cache, tokens, rng, eos_ids, *, sampler):
+    """Paged-pool analogue of :func:`decode_sample_step`."""
+    logits, cache = paged_decode_step(cfg, env, params, cache, tokens)
+    tok = sample_on_device(logits, rng, sampler)
+    return tok, tok == eos_ids, cache
+
+
+def prefill_sample_step(cfg, env: Env, params, cache, tokens, slot, q_offset,
+                        n_valid, rng, *, sampler):
+    """Chunked-prefill continuation with the first generated token sampled
+    on device: returns (token (1,), cache).  Only meaningful on a prompt's
+    final chunk; earlier chunks' sampled token is dead and ignored."""
+    logits, cache = prefill_step(cfg, env, params, cache, tokens, slot, q_offset, n_valid)
+    return sample_on_device(logits, rng, sampler), cache

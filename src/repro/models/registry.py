@@ -9,7 +9,6 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import DEEPSEEK, DENSE, ENCDEC, MOE, RWKV6, ZAMBA2, ModelConfig
 from repro.core.placement import Env
@@ -40,6 +39,15 @@ class Model:
     paged_decode_step: Callable[[Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]] | None = None
     paged_cache_defs: Callable[[int, int, int, int], Pytree] | None = None
     init_paged_cache: Callable[[int, int, int, int], Pytree] | None = None
+    # sampled steps (async engine): sampling fused into the jit step so
+    # only [batch] token ids cross the host boundary per step.
+    # decode_sample_step(params, cache, tokens, rng, eos_ids, *, sampler)
+    #   -> (tokens', eos_hit, cache); sampler is static under jit.
+    # prefill_sample_step mirrors prefill_step with a trailing rng and
+    # returns (token (1,), cache).  None for families without them.
+    decode_sample_step: Callable[..., tuple[jax.Array, jax.Array, Pytree]] | None = None
+    paged_decode_sample_step: Callable[..., tuple[jax.Array, jax.Array, Pytree]] | None = None
+    prefill_sample_step: Callable[..., tuple[jax.Array, Pytree]] | None = None
 
     # ---- derived helpers -------------------------------------------------
     def init(self, rng: jax.Array) -> Pytree:
@@ -139,5 +147,19 @@ def build_model(cfg: ModelConfig, env: Env | None = None) -> Model:
         init_paged_cache=(
             functools.partial(fam.init_paged_cache, cfg)
             if hasattr(fam, "init_paged_cache") else None
+        ),
+        # families opt into on-device sampling (async engine) by defining
+        # the *_sample_step variants
+        decode_sample_step=(
+            functools.partial(fam.decode_sample_step, cfg, env)
+            if hasattr(fam, "decode_sample_step") else None
+        ),
+        paged_decode_sample_step=(
+            functools.partial(fam.paged_decode_sample_step, cfg, env)
+            if hasattr(fam, "paged_decode_sample_step") else None
+        ),
+        prefill_sample_step=(
+            functools.partial(fam.prefill_sample_step, cfg, env)
+            if hasattr(fam, "prefill_sample_step") else None
         ),
     )

@@ -10,7 +10,6 @@ the same cache pytree (generalized offload, DESIGN.md §4).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

@@ -30,6 +30,32 @@ Two schedules (``schedule``; :mod:`repro.serving.scheduler`):
   are token-identical to ``decode-only``.  Paged sequences admit
   partially — each chunk acquires only the blocks it needs.
 
+Two execution modes (``async_mode``):
+
+* ``async_mode=True`` (default) — the dispatch-ahead pipeline.  Every
+  jit step samples **on device** and returns sampled token ids plus a
+  per-slot EOS flag instead of logits, so the per-step host transfer is
+  ``[batch]`` ints, and the token ids feed the next step device-to-device
+  (``tok_state``).  The engine dispatches iteration *t+1* from *t*'s
+  *planned* host state before *t*'s tokens are observed — JAX's async
+  dispatch keeps the device busy through all host-side Python — then
+  fetches *t*'s small token array in the background.  Length/max-new
+  retirements are host-deterministic and gate dispatch exactly like the
+  sync engine; EOS retirements are observed one step late, and the one
+  speculative token dispatched past an EOS is masked (never emitted,
+  its cache writes are reset with the slot).  Greedy outputs are
+  token-identical to sync mode; temperature sampling is valid but
+  consumes the rng stream in a different order.
+* ``async_mode=False`` — the conservative synchronous fallback
+  (``--async off``): block on each step's logits, sample on host.
+
+Correctness of dispatch-ahead rests on device data-flow ordering: every
+device op threads ``self.cache`` (and ``self.staging``/``tok_state``),
+so host bookkeeping done at dispatch time (block flushes, table syncs,
+resets) lands *after* the in-flight step's writes.  The one host action
+that needs observed token values — preemption's exact-recovery refold —
+drains the pipeline first.
+
 The decode step is wrapped by ``core.pipeline.pipelined_step`` when
 ``sub_batches > 1`` (paper Fig. 3), and attention runs through
 ``core.offload`` in the layout chosen by ``core.balance.plan``.
@@ -42,6 +68,7 @@ so TTFT/throughput in steps are comparable across schedules.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Any
 
 import jax
@@ -53,7 +80,7 @@ from repro.models.registry import Model
 from repro.serving import kv_cache
 from repro.serving.paged import BlockPool, PagedCacheManager
 from repro.serving.paged import device as paged_dev
-from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.sampler import SamplerConfig, sample, sample_on_device
 from repro.serving.scheduler import PrefillChunk, Scheduler
 
 Pytree = Any
@@ -72,6 +99,9 @@ class Request:
     admit_step: int = -1
     first_token_step: int = -1
     finish_step: int = -1
+    # async engine bookkeeping
+    in_flight: int = 0              # tokens dispatched, not yet observed
+    admit_base: int = 0             # len(out_tokens) at last (re-)admission
 
 
 @dataclasses.dataclass
@@ -96,6 +126,26 @@ class EngineStats:
         return self.generated / max(self.engine_steps, 1)
 
 
+@dataclasses.dataclass
+class _PendingStep:
+    """One dispatched-but-unobserved model step (async pipeline).
+
+    ``reqs`` pins the requests that were in the decode batch at dispatch
+    — a slot may be retired and re-admitted to a different request
+    before this record is observed, so slot indices alone are not
+    enough.  ``tokens``/``eos`` are in-flight device arrays; fetching
+    them blocks only until *this* step finishes while later steps keep
+    the device busy.
+    """
+
+    step: int                            # engine_steps value at dispatch
+    reqs: dict[int, Request]             # slot -> request in decode batch
+    tokens: jax.Array | None             # (B,) sampled ids (device)
+    eos: jax.Array | None                # (B,) bool EOS hits (device)
+    work: PrefillChunk | None = None     # chunk fused into this step
+    pre_tok: jax.Array | None = None     # (1,) first token when work.last
+
+
 class Engine:
     def __init__(
         self,
@@ -112,6 +162,7 @@ class Engine:
         schedule: str = "decode-only",
         prefill_chunk: int = 32,
         token_budget: int | None = None,
+        async_mode: bool = True,
     ):
         self.model = model
         self.params = params
@@ -120,6 +171,7 @@ class Engine:
         self.cache_kind = cache_kind
         self.schedule = schedule
         self.prefill_chunk = prefill_chunk
+        self.async_mode = async_mode
         self.slots: list[Request | None] = [None] * n_slots
         self.stats = EngineStats()
         self.rng = rng if rng is not None else jax.random.key(0)
@@ -149,12 +201,36 @@ class Engine:
                 n_slots, self.n_blocks, block_size, self.max_blocks
             )
             self._decode = jax.jit(model.paged_decode_step)
+            if async_mode:
+                if model.paged_decode_sample_step is not None:
+                    self._decode_sampled = jax.jit(
+                        model.paged_decode_sample_step, static_argnames=("sampler",)
+                    )
+                else:
+                    self._decode_sampled = self._wrap_sampled(model.paged_decode_step)
         elif cache_kind == "dense":
             self.cache = model.init_cache(n_slots, max_seq)
             step = pipelined_step(model.decode_step, sub_batches)
             self._decode = jax.jit(step)
+            if async_mode:
+                if sub_batches == 1 and model.decode_sample_step is not None:
+                    self._decode_sampled = jax.jit(
+                        model.decode_sample_step, static_argnames=("sampler",)
+                    )
+                else:
+                    self._decode_sampled = self._wrap_sampled(step)
         else:
             raise ValueError(f"unknown cache_kind {cache_kind!r}")
+
+        # async pipeline state (allocated in both modes so shared helpers
+        # like _prepare_append can test `self._pending` unconditionally)
+        self._pending: deque[_PendingStep] = deque()
+        self._first_pending: list[tuple[Request, jax.Array]] = []
+        if async_mode:
+            self._tok_state = jnp.zeros((n_slots,), jnp.int32)
+            self._eos_dev = jnp.full((n_slots,), -1, jnp.int32)
+            self._rng_zero = jax.random.key(0)
+            self._jit_sample = jax.jit(sample_on_device, static_argnames=("cfg",))
 
         self.sched = Scheduler(
             n_slots=n_slots, max_seq=max_seq, mode=schedule,
@@ -163,6 +239,18 @@ class Engine:
         )
         if schedule == "hybrid":
             self._init_hybrid(sub_batches)
+
+    @staticmethod
+    def _wrap_sampled(base_step):
+        """Fuse on-device sampling onto a logits step (used when the
+        family has no *_sample_step, or the step is sub-batch pipelined)."""
+
+        def _sampled(params, cache, tokens, rng, eos_ids, *, sampler):
+            logits, new_cache = base_step(params, cache, tokens)
+            tok = sample_on_device(logits, rng, sampler)
+            return tok, tok == eos_ids, new_cache
+
+        return jax.jit(_sampled, static_argnames=("sampler",))
 
     def _init_hybrid(self, sub_batches: int) -> None:
         model = self.model
@@ -180,32 +268,98 @@ class Engine:
         # chunk tokens of the prompt being prefilled (set by _begin_prefill)
         self._inflight_tokens: np.ndarray | None = None
         self._prefix_blocks = 0
-        self._solo = jax.jit(model.prefill_step)
+        sampler = self.sampler
         if self.cache_kind == "paged":
             # persistent staging cache (one fixed shape): chunks accumulate
             # here, completed blocks flush into the pool
             self.staging = model.init_cache(1, self.max_blocks * self.block_size)
 
-            def _fused(params, cache, staging, dec_tokens, pre_tokens, off, nv):
+        if not self.async_mode:
+            self._solo = jax.jit(model.prefill_step)
+            if self.cache_kind == "paged":
+
+                def _fused(params, cache, staging, dec_tokens, pre_tokens, off, nv):
+                    pre_logits, staging = model.prefill_step(
+                        params, staging, pre_tokens, 0, off, nv
+                    )
+                    dec_logits, cache = model.paged_decode_step(params, cache, dec_tokens)
+                    return dec_logits, pre_logits, cache, staging
+            else:
+
+                def _fused(params, cache, dec_tokens, pre_tokens, slot, off, nv):
+                    pre_logits, cache = model.prefill_step(
+                        params, cache, pre_tokens, slot, off, nv
+                    )
+                    dec_logits, cache = model.decode_step(params, cache, dec_tokens)
+                    # decode advanced every slot's length; the mid-prefill slot
+                    # stays at its chunk end (its garbage append is overwritten
+                    # by the next chunk / first decode token)
+                    lengths = cache["lengths"].at[slot].set(off + nv)
+                    return dec_logits, pre_logits, {**cache, "lengths": lengths}
+
+            self._fused = jax.jit(_fused)
+            return
+
+        # ---- async closures: sampling fused, token state fed back on device.
+        # The fused step returns sampled ids + EOS flags for the decode
+        # batch and, on a prompt's final chunk, splices the chunk's first
+        # generated token into tok_state at `slot` so the next decode step
+        # consumes it without any host round-trip.
+        if model.prefill_sample_step is not None:
+            prefill_sample = model.prefill_sample_step
+        else:
+            def prefill_sample(params, cache, tokens, slot, off, nv, rng, *,
+                               sampler):
+                logits, cache = model.prefill_step(params, cache, tokens, slot, off, nv)
+                return sample_on_device(logits, rng, sampler), cache
+
+        if self.cache_kind == "paged":
+
+            def _fused_async(params, cache, staging, tok_state, pre_tokens,
+                             slot, off, nv, rng, eos_ids, last):
+                r_dec, r_pre = jax.random.split(rng)
                 pre_logits, staging = model.prefill_step(
                     params, staging, pre_tokens, 0, off, nv
                 )
-                dec_logits, cache = model.paged_decode_step(params, cache, dec_tokens)
-                return dec_logits, pre_logits, cache, staging
+                dec_logits, cache = model.paged_decode_step(params, cache, tok_state)
+                toks = sample_on_device(dec_logits, r_dec, sampler)
+                pre_tok = sample_on_device(pre_logits, r_pre, sampler)
+                state = jnp.where(last, toks.at[slot].set(pre_tok[0]), toks)
+                return state, toks, toks == eos_ids, pre_tok, cache, staging
+
+            def _solo_async(params, staging, tok_state, pre_tokens,
+                            slot, off, nv, rng, last):
+                pre_tok, staging = prefill_sample(
+                    params, staging, pre_tokens, 0, off, nv, rng, sampler=sampler
+                )
+                state = jnp.where(last, tok_state.at[slot].set(pre_tok[0]), tok_state)
+                return state, pre_tok, staging
         else:
 
-            def _fused(params, cache, dec_tokens, pre_tokens, slot, off, nv):
+            def _fused_async(params, cache, tok_state, pre_tokens,
+                             slot, off, nv, rng, eos_ids, last):
+                r_dec, r_pre = jax.random.split(rng)
                 pre_logits, cache = model.prefill_step(
                     params, cache, pre_tokens, slot, off, nv
                 )
-                dec_logits, cache = model.decode_step(params, cache, dec_tokens)
-                # decode advanced every slot's length; the mid-prefill slot
-                # stays at its chunk end (its garbage append is overwritten
-                # by the next chunk / first decode token)
+                dec_logits, cache = model.decode_step(params, cache, tok_state)
                 lengths = cache["lengths"].at[slot].set(off + nv)
-                return dec_logits, pre_logits, {**cache, "lengths": lengths}
+                cache = {**cache, "lengths": lengths}
+                toks = sample_on_device(dec_logits, r_dec, sampler)
+                pre_tok = sample_on_device(pre_logits, r_pre, sampler)
+                state = jnp.where(last, toks.at[slot].set(pre_tok[0]), toks)
+                return state, toks, toks == eos_ids, pre_tok, cache
 
-        self._fused = jax.jit(_fused)
+            def _solo_async(params, cache, tok_state, pre_tokens,
+                            slot, off, nv, rng, last):
+                pre_tok, cache = prefill_sample(
+                    params, cache, pre_tokens, slot, off, nv, rng, sampler=sampler
+                )
+                state = jnp.where(last, tok_state.at[slot].set(pre_tok[0]), tok_state)
+                return state, pre_tok, cache
+
+        self._fused = jax.jit(_fused_async)
+        self._solo = jax.jit(_solo_async)
 
     # ------------------------------------------------------------- requests
     def submit(self, req: Request):
@@ -226,14 +380,107 @@ class Engine:
         self.rng, sub = jax.random.split(self.rng)
         return sub
 
+    def _step_rng(self) -> jax.Array:
+        """Per-dispatch rng for the async path.  Greedy never consumes
+        randomness, so skip the per-step host-side key split entirely."""
+        if self.sampler.temperature <= 0.0:
+            return self._rng_zero
+        return self._next_rng()
+
     @staticmethod
     def _refold(req: Request) -> np.ndarray:
         """Prompt plus already-generated tokens: prefilling this exactly
         reproduces a preempted request's decode state (greedy-exact)."""
+        assert req.in_flight == 0, "refold needs every dispatched token observed"
         return np.concatenate(
             [np.asarray(req.prompt, np.int32),
              np.asarray(req.out_tokens, np.int32)]
         )
+
+    # --------------------------------------------- async pipeline primitives
+    def _predicted_done(self, req: Request) -> bool:
+        """Will the sync engine have marked ``req`` done once every
+        dispatched token is observed?  Mirrors ``_finish_decode``'s check
+        exactly: the first token after a (re-)admission comes from a
+        prefill sample and is never length-checked, so a request is only
+        predicted done once a *decode* token can trip the condition."""
+        c = len(req.out_tokens) + req.in_flight
+        if c < req.admit_base + 2:
+            return False
+        return (c >= req.max_new_tokens
+                or len(req.prompt) + c >= self.max_seq - 1)
+
+    def _predicted_active(self) -> list[int]:
+        if not self.async_mode:
+            return [i for i, s in enumerate(self.slots) if s is not None]
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and not self._predicted_done(s)]
+
+    def _dispatch(self, rec: _PendingStep) -> None:
+        """Queue a dispatched step; observe the previous one *after* the
+        new one is in flight (the dispatch-ahead overlap)."""
+        self._pending.append(rec)
+        if len(self._pending) > 1:
+            self._observe(self._pending.popleft())
+
+    def _flush_first(self) -> None:
+        for req, tok in self._first_pending:
+            req.in_flight -= 1
+            req.out_tokens.append(int(np.asarray(tok)[0]))
+        self._first_pending.clear()
+
+    def _observe(self, rec: _PendingStep) -> None:
+        """Fetch one step's token/EOS arrays and apply completions.
+
+        This is the only place the async engine blocks on the device, and
+        by construction a newer step is already queued behind the one
+        being fetched.  EOS retirements discovered here are one step
+        late: the speculative token a later in-flight step sampled for a
+        now-done request is masked (``req.done`` short-circuit below)."""
+        self._flush_first()
+        if rec.work is not None and rec.work.last:
+            req = rec.work.req
+            req.in_flight -= 1
+            req.out_tokens.append(int(np.asarray(rec.pre_tok)[0]))
+        if rec.tokens is None:
+            return
+        toks = np.asarray(rec.tokens)
+        eos = np.asarray(rec.eos)
+        for i, req in rec.reqs.items():
+            req.in_flight -= 1
+            if req.done:
+                continue            # speculative token past EOS: masked
+            tok = int(toks[i])
+            req.out_tokens.append(tok)
+            self.stats.generated += 1
+            length = len(req.prompt) + len(req.out_tokens)
+            if (
+                bool(eos[i])
+                or len(req.out_tokens) >= req.max_new_tokens
+                or length >= self.max_seq - 1
+            ):
+                req.done = True
+                req.finish_step = rec.step
+                self._release_slot(i, req)
+
+    def _drain(self) -> None:
+        """Observe every in-flight step (pipeline empties; ``out_tokens``
+        and ``in_flight`` become exact)."""
+        while self._pending:
+            self._observe(self._pending.popleft())
+        self._flush_first()
+
+    def _release_slot(self, slot: int, req: Request) -> None:
+        if self.slots[slot] is not req:
+            return                  # slot already recycled past this record
+        self.slots[slot] = None
+        if self.cache_kind == "paged":
+            self.manager.free_slot(slot)
+            self.cache = paged_dev.sync_slot(
+                self.cache, slot, self.manager.tables[slot], 0
+            )
+        else:
+            self.cache = kv_cache.reset_slot(self.cache, slot)
 
     # ------------------------------------------- admission (whole-prefill)
     def _prefill_cost(self, n_tokens: int) -> int:
@@ -256,7 +503,7 @@ class Engine:
             logits, sub_cache = self._prefill(self.params, prompt, sub_cache)
             self.cache = kv_cache.insert(self.cache, sub_cache, slot)
             self.slots[slot] = req
-            self._sample_prefill(req, logits)
+            self._sample_prefill(req, slot, logits)
 
     def _admit_paged(self):
         """Admit while slots AND blocks allow; head-of-line blocks wait.
@@ -294,11 +541,25 @@ class Engine:
                 self.cache, slot, self.manager.tables[slot], len(full)
             )
             self.slots[slot] = req
-            self._sample_prefill(req, logits)
+            self._sample_prefill(req, slot, logits)
 
-    def _sample_prefill(self, req: Request, logits):
-        tok = int(sample(logits, self._next_rng(), self.sampler)[0])
-        req.out_tokens.append(tok)
+    def _sample_prefill(self, req: Request, slot: int, logits):
+        req.admit_base = len(req.out_tokens)
+        if self.async_mode:
+            # sample on device, feed the token into tok_state for the next
+            # decode step, and fetch the id lazily with the step stream —
+            # the host never blocks on the prefill here
+            tok = self._jit_sample(logits, self._step_rng(), cfg=self.sampler)
+            self._tok_state = paged_dev.feed_token(self._tok_state, slot, tok[0])
+            self._eos_dev = paged_dev.set_stop_id(self._eos_dev, slot, req.eos_id)
+            req.in_flight += 1
+            self._first_pending.append((req, tok))
+        else:
+            req.out_tokens.append(int(sample(logits, self._next_rng(), self.sampler)[0]))
+        self._record_first_token(req)
+
+    def _record_first_token(self, req: Request) -> None:
+        """Shared prefill-completion accounting (sync and async paths)."""
         if req.first_token_step < 0:
             req.first_token_step = self.stats.engine_steps
             self.stats.ttft_steps_sum += req.first_token_step - req.submit_step
@@ -326,16 +587,9 @@ class Engine:
         return start, len(full)
 
     def _complete_chunk(self, work: PrefillChunk, pre_logits):
-        if self.cache_kind == "paged":
-            bs = self.block_size
-            end = work.start + work.n_valid
-            for j in range(work.start // bs, (end - 1) // bs + 1):
-                if j < self._prefix_blocks:
-                    continue            # prefix-cache hit: already valid
-                self.cache = paged_dev.write_prompt_block(
-                    self.cache, self.staging, self.manager.blocks[work.slot][j],
-                    j * bs,
-                )
+        """Commit an executed chunk (sync mode: host-samples the first
+        token from the chunk's logits when it completes the prompt)."""
+        self._flush_chunk_blocks(work)
         self.sched.advance(work)
         if work.last:
             req = work.req
@@ -346,14 +600,53 @@ class Engine:
                     work.start + work.n_valid,
                 )
             self._inflight_tokens = None
-            self._sample_prefill(req, pre_logits)
+            self._sample_prefill(req, work.slot, pre_logits)
+
+    def _complete_chunk_async(self, work: PrefillChunk):
+        """Async twin of :meth:`_complete_chunk`: the fused step already
+        sampled the first token on device and spliced it into
+        ``tok_state``; the host only does block/table bookkeeping (safe at
+        dispatch time — device data-flow orders it after the step) and
+        records that one more token is in flight."""
+        self._flush_chunk_blocks(work)
+        self.sched.advance(work)
+        if work.last:
+            req = work.req
+            self.slots[work.slot] = req
+            if self.cache_kind == "paged":
+                self.cache = paged_dev.sync_slot(
+                    self.cache, work.slot, self.manager.tables[work.slot],
+                    work.start + work.n_valid,
+                )
+            self._inflight_tokens = None
+            req.admit_base = len(req.out_tokens)
+            req.in_flight += 1
+            self._eos_dev = paged_dev.set_stop_id(
+                self._eos_dev, work.slot, req.eos_id
+            )
+            self._record_first_token(req)
+
+    def _flush_chunk_blocks(self, work: PrefillChunk) -> None:
+        if self.cache_kind != "paged":
+            return
+        bs = self.block_size
+        end = work.start + work.n_valid
+        for j in range(work.start // bs, (end - 1) // bs + 1):
+            if j < self._prefix_blocks:
+                continue            # prefix-cache hit: already valid
+            self.cache = paged_dev.write_prompt_block(
+                self.cache, self.staging, self.manager.blocks[work.slot][j],
+                j * bs,
+            )
 
     # ----------------------------------------------------- block management
     def _kv_len(self, slot: int) -> int:
         """KV positions held for ``slot`` (last sampled token not yet
-        appended — it is this step's input)."""
+        appended — it is this step's input).  Counts in-flight tokens:
+        the async engine plans appends from dispatched, not observed,
+        state."""
         req = self.slots[slot]
-        return len(req.prompt) + len(req.out_tokens) - 1
+        return len(req.prompt) + len(req.out_tokens) + req.in_flight - 1
 
     def _preempt(self, slot: int):
         """Evict ``slot`` to the queue front; blocks return to the pool.
@@ -371,14 +664,26 @@ class Engine:
     def _prepare_append(self, active: list[int]) -> list[int]:
         """Guarantee every active slot can write its next token: allocate
         boundary blocks, copy-on-write shared tails, preempt the youngest
-        sequence when the pool runs dry.  Returns the surviving slots."""
+        sequence when the pool runs dry.  Returns the surviving slots.
+
+        Async: a preemption decision snapshots ``out_tokens`` for exact
+        recovery, so the pipeline is drained first; completions the drain
+        reveals may free enough blocks to avoid evicting at all, so the
+        allocation is retried before picking a victim."""
         alive = set(active)
         for slot in sorted(active, key=lambda s: self.manager.admit_seq[s]):
             while slot in alive:
+                if self.slots[slot] is None:
+                    alive.discard(slot)     # retired during a drain below
+                    break
                 directive, payload = self.manager.ensure_append(
                     slot, self._kv_len(slot)
                 )
                 if directive == "oom":
+                    if self._pending:
+                        self._drain()
+                        alive = {s for s in alive if self.slots[s] is not None}
+                        continue            # retry with drained state
                     victim = self.manager.youngest(alive)
                     self._preempt(victim)
                     alive.discard(victim)
@@ -417,19 +722,16 @@ class Engine:
             ):
                 req.done = True
                 req.finish_step = self.stats.engine_steps
-                self.slots[i] = None
-                if self.cache_kind == "paged":
-                    self.manager.free_slot(i)
-                    self.cache = paged_dev.sync_slot(
-                        self.cache, i, self.manager.tables[i], 0
-                    )
-                else:
-                    self.cache = kv_cache.reset_slot(self.cache, i)
+                self._release_slot(i, req)
 
     def step(self) -> bool:
         """One engine iteration.  Returns whether any work remains."""
         if self.schedule == "hybrid":
+            if self.async_mode:
+                return self._step_hybrid_async()
             return self._step_hybrid()
+        if self.async_mode:
+            return self._step_decode_only_async()
         return self._step_decode_only()
 
     def _step_decode_only(self) -> bool:
@@ -448,6 +750,33 @@ class Engine:
         self.stats.engine_steps += 1
         self._finish_decode(active, logits)
         return any(s is not None for s in self.slots) or self.sched.has_work()
+
+    def _step_decode_only_async(self) -> bool:
+        self._admit()
+        active = self._predicted_active()
+        if self.cache_kind == "paged" and active:
+            active = self._prepare_append(active)
+        if not active:
+            self._drain()               # nothing to dispatch: settle state
+            return any(s is not None for s in self.slots) or self.sched.has_work()
+        self.stats.peak_active = max(self.stats.peak_active, len(active))
+
+        toks, eos, self.cache = self._decode_sampled(
+            self.params, self.cache, self._tok_state, self._step_rng(),
+            self._eos_dev, sampler=self.sampler,
+        )
+        self._tok_state = toks
+        self.stats.decode_steps += 1
+        self.stats.engine_steps += 1
+        reqs = {}
+        for i in active:
+            req = self.slots[i]
+            req.in_flight += 1
+            reqs[i] = req
+        self._dispatch(_PendingStep(
+            step=self.stats.engine_steps, reqs=reqs, tokens=toks, eos=eos,
+        ))
+        return True
 
     def _step_hybrid(self) -> bool:
         sched = self.sched
@@ -522,10 +851,101 @@ class Engine:
             self._complete_chunk(work, pre_logits)
         return any(s is not None for s in self.slots) or sched.has_work()
 
+    def _step_hybrid_async(self) -> bool:
+        sched = self.sched
+        if sched.inflight is None and len(sched):
+            free = self._free_slots()
+            if free:
+                req = sched.pop()
+                slot = free[0]
+                start, total = self._begin_prefill(req, slot)
+                sched.begin(req, slot, start, total)
+                if req.admit_step < 0:
+                    req.admit_step = self.stats.engine_steps + 1
+
+        active = self._predicted_active()
+        if self.cache_kind == "paged" and active:
+            active = self._prepare_append(active)
+        decision = sched.plan_ahead(active)
+        active = decision.decode_slots       # the scheduler owns the batch
+        work = decision.prefill
+        if work is not None and self.cache_kind == "paged":
+            ok = self.manager.extend_chunked(
+                work.slot, len(self._inflight_tokens),
+                work.start + work.n_valid, work.last,
+            )
+            if not ok:
+                work = None             # pool dry: decode-only iteration
+        if not active and work is None:
+            self._drain()
+            return any(s is not None for s in self.slots) or sched.has_work()
+
+        self.stats.engine_steps += 1
+        self.stats.peak_active = max(self.stats.peak_active, len(active))
+        rng = self._step_rng()
+        if work is not None:
+            chunk = np.zeros((1, work.bucket), np.int32)
+            chunk[0, :work.n_valid] = self._inflight_tokens[
+                work.start:work.start + work.n_valid
+            ]
+            chunk = jnp.asarray(chunk)
+            off, nv = np.int32(work.start), np.int32(work.n_valid)
+            wslot = np.int32(work.slot)
+
+        toks = eos = pre_tok = None
+        if active and work is not None:
+            if self.cache_kind == "paged":
+                (self._tok_state, toks, eos, pre_tok,
+                 self.cache, self.staging) = self._fused(
+                    self.params, self.cache, self.staging, self._tok_state,
+                    chunk, wslot, off, nv, rng, self._eos_dev, work.last,
+                )
+            else:
+                self._tok_state, toks, eos, pre_tok, self.cache = self._fused(
+                    self.params, self.cache, self._tok_state,
+                    chunk, wslot, off, nv, rng, self._eos_dev, work.last,
+                )
+            self.stats.decode_steps += 1
+        elif active:
+            toks, eos, self.cache = self._decode_sampled(
+                self.params, self.cache, self._tok_state, rng,
+                self._eos_dev, sampler=self.sampler,
+            )
+            self._tok_state = toks
+            self.stats.decode_steps += 1
+        else:
+            if self.cache_kind == "paged":
+                self._tok_state, pre_tok, self.staging = self._solo(
+                    self.params, self.staging, self._tok_state,
+                    chunk, wslot, off, nv, rng, work.last,
+                )
+            else:
+                self._tok_state, pre_tok, self.cache = self._solo(
+                    self.params, self.cache, self._tok_state,
+                    chunk, wslot, off, nv, rng, work.last,
+                )
+
+        reqs = {}
+        for i in active:
+            req = self.slots[i]
+            req.in_flight += 1
+            reqs[i] = req
+        rec = _PendingStep(
+            step=self.stats.engine_steps, reqs=reqs, tokens=toks, eos=eos,
+            work=work, pre_tok=pre_tok,
+        )
+        if work is not None:
+            self.stats.prefill_chunks += 1
+            self._complete_chunk_async(work)
+        self._dispatch(rec)
+        return True
+
     def run(self, max_steps: int = 10_000) -> EngineStats:
         for _ in range(max_steps):
             if not self.step():
                 break
+        if self.async_mode:
+            self._drain()           # settle out_tokens if max_steps truncated
         return self.stats
 
     # -------------------------------------------------------- introspection

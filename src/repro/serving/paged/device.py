@@ -8,6 +8,10 @@ allocator decisions reduce to three device primitives: scatter a prefill
 slice into a block, duplicate a block (copy-on-write), and refresh one
 block-table row.  Block ids arrive as traced scalars so admission never
 recompiles.
+
+The module also hosts the async engine's tiny per-slot state vectors
+(:func:`feed_token` token feedback, :func:`set_stop_id` stop flags):
+same donated, recompile-free update pattern, shared by both cache kinds.
 """
 from __future__ import annotations
 
@@ -96,6 +100,30 @@ def read_block(sub_cache: Pytree, cache: Pytree, phys: int, start: int) -> Pytre
 @_donate0
 def _set_row(tables: jax.Array, slot, row: jax.Array) -> jax.Array:
     return tables.at[slot].set(row)
+
+
+# NOT donated: the async engine's pending-step records may still hold a
+# reference to the array being updated (it doubles as a step output)
+@jax.jit
+def _set_scalar(arr: jax.Array, slot, value) -> jax.Array:
+    return arr.at[slot].set(value)
+
+
+def feed_token(tok_state: jax.Array, slot: int, token) -> jax.Array:
+    """Async engine: push one slot's next decode input into the
+    device-resident token feedback vector (``token`` may be a host int or
+    a 0-d device array — a prefill's first sampled token never needs to
+    round-trip through the host before the next decode step consumes
+    it).  Used for both cache kinds; lives here with the engine's other
+    donated per-slot device primitives."""
+    return _set_scalar(tok_state, slot, jnp.asarray(token, jnp.int32))
+
+
+def set_stop_id(eos_ids: jax.Array, slot: int, eos_id: int) -> jax.Array:
+    """Refresh one slot's on-device stop id (-1 = never stops).  The
+    fused sampled step compares each sampled token against this vector to
+    produce the per-slot EOS flag the host observes one step late."""
+    return _set_scalar(eos_ids, slot, jnp.int32(eos_id))
 
 
 def sync_slot(cache: Pytree, slot: int, row, length: int | None = None) -> Pytree:

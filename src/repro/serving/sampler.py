@@ -1,4 +1,16 @@
-"""Token sampling (greedy / temperature / top-k), pure JAX."""
+"""Token sampling (greedy / temperature / top-k), pure JAX.
+
+Two entry points with identical semantics:
+
+* :func:`sample_on_device` — jit-traceable; the async engine folds it
+  into the fused decode / prefill-chunk step so the per-step host
+  transfer is ``[batch]`` sampled ids instead of ``[batch, vocab]``
+  logits, and the next step can consume the tokens device-to-device.
+  ``cfg`` must be a static (hashable) argument under ``jax.jit``.
+* :func:`sample` — the host-side oracle the synchronous engine uses;
+  ``tests/test_sampler.py`` asserts the two agree token-for-token under
+  a fixed rng for greedy, temperature, and top-k configs.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -13,8 +25,28 @@ class SamplerConfig:
     top_k: int = 0             # 0 -> no truncation
 
 
+def sample_on_device(logits: jax.Array, rng: jax.Array, cfg: SamplerConfig) -> jax.Array:
+    """logits (B, V) -> tokens (B,) int32, traceable inside a jit step.
+
+    The branches below are Python-level on the *static* ``cfg``, so each
+    sampler config lowers to a single straight-line program (greedy
+    compiles to one argmax — no rng use at all).
+    """
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(scaled, cfg.top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
+
+
 def sample(logits: jax.Array, rng: jax.Array, cfg: SamplerConfig) -> jax.Array:
-    """logits (B, V) -> tokens (B,) int32."""
+    """Host oracle: logits (B, V) -> tokens (B,) int32.
+
+    Kept as an independent implementation (not a wrapper) so the
+    device/host parity test actually compares two code paths.
+    """
     if cfg.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / cfg.temperature

@@ -155,6 +155,25 @@ class Scheduler:
     def schedule(self, active_slots: list[int]) -> Decision:
         """Pack one iteration: every active slot decodes; leftover budget
         funds one chunk of the in-flight prompt."""
+        return self._pack(active_slots)
+
+    def plan_ahead(self, planned_active: list[int]) -> Decision:
+        """Async dispatch-ahead path: pack iteration *t+1* while iteration
+        *t* is still executing on the device.
+
+        Everything the packing reads is *planned*, not observed, state:
+        ``planned_active`` is the engine's predicted active set (length /
+        max-new retirements are host-deterministic at dispatch time; EOS
+        retirements lag one step and are masked by the engine), and
+        ``self.inflight`` already reflects chunks :meth:`advance`-d at
+        their dispatch — the chunk *will* run, device data-flow ordering
+        guarantees it, so host bookkeeping may run ahead of execution.
+        The packing rule itself is identical to :meth:`schedule`; that is
+        what keeps ``--async off`` greedy token-identical.
+        """
+        return self._pack(planned_active)
+
+    def _pack(self, active_slots: list[int]) -> Decision:
         work = None
         if self.mode == "hybrid" and self.inflight is not None:
             fl = self.inflight

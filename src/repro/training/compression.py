@@ -35,7 +35,9 @@ def compress(grads: Pytree, error: Pytree):
         return q, scale, new_e
 
     out = jax.tree.map(one, grads, error)
-    istuple = lambda x: isinstance(x, tuple)
+    def istuple(x):
+        return isinstance(x, tuple)
+
     q = jax.tree.map(lambda t: t[0], out, is_leaf=istuple)
     s = jax.tree.map(lambda t: t[1], out, is_leaf=istuple)
     e = jax.tree.map(lambda t: t[2], out, is_leaf=istuple)

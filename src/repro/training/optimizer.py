@@ -57,7 +57,9 @@ class AdamW:
     moment_dtype: Any = jnp.float32
 
     def init(self, params: Pytree) -> Pytree:
-        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        def zeros(p):
+            return jnp.zeros(p.shape, self.moment_dtype)
+
         return {
             "m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),

@@ -15,7 +15,6 @@ sequential reference in tests/test_pipeline_pp.py).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax

@@ -13,7 +13,7 @@ model code (per-block ``jax.checkpoint``).
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

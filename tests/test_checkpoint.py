@@ -6,7 +6,6 @@ import jax
 from repro.launch.mesh import compat_mesh
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 

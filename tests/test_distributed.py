@@ -7,7 +7,6 @@ from hypothesis import strategies as st
 
 from repro.distributed.fault_tolerance import (
     Heartbeat,
-    MeshPlan,
     StragglerMonitor,
     Supervisor,
     plan_rescale,

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.analysis.hlo_cost import HloCostModel, analyze
+from repro.analysis.hlo_cost import analyze
 
 
 def _compile(fn, *args):

@@ -1,0 +1,121 @@
+"""On-device sampling vs the host oracle, and async (dispatch-ahead)
+vs synchronous engine greedy equivalence for both cache kinds —
+including a preemption run and one-step-late EOS retirement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.reduced import reduce_config
+from repro.core.placement import Env
+from repro.models.registry import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.sampler import SamplerConfig, sample, sample_on_device
+
+
+# ------------------------------------------------------------ device/host
+@pytest.mark.parametrize("cfg", [
+    SamplerConfig(),                                # greedy
+    SamplerConfig(temperature=0.7),                 # temperature
+    SamplerConfig(temperature=1.0, top_k=5),        # top-k
+], ids=["greedy", "temperature", "top-k"])
+def test_sample_on_device_matches_host_oracle(cfg):
+    logits = jax.random.normal(jax.random.key(3), (4, 64))
+    for seed in range(5):
+        rng = jax.random.key(seed)
+        dev = jax.jit(sample_on_device, static_argnames=("cfg",))(
+            logits, rng, cfg=cfg
+        )
+        host = sample(logits, rng, cfg)
+        assert dev.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(dev), np.asarray(host))
+
+
+def test_sample_on_device_top_k_truncates():
+    """Tokens outside the top-k must never be sampled, however hot."""
+    logits = jnp.array([[1.0, 0.9, 0.89, 0.88]])
+    cfg = SamplerConfig(temperature=50.0, top_k=2)   # near-uniform over top-2
+    seen = {int(sample_on_device(logits, jax.random.key(i), cfg)[0])
+            for i in range(30)}
+    assert seen <= {0, 1} and len(seen) == 2
+
+
+# --------------------------------------------------------- engine parity
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = reduce_config("llama3.2-1b")
+    model = build_model(cfg, Env())
+    return model, model.init(jax.random.key(0))
+
+
+def _serve(model, params, prompts, async_mode, n_new=6, n_slots=2,
+           max_seq=32, **kw):
+    eng = Engine(model, params, n_slots=n_slots, max_seq=max_seq,
+                 async_mode=async_mode, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run()
+    return reqs, stats, eng
+
+
+PROMPTS = [np.arange(1, 6, dtype=np.int32),
+           np.arange(7, 10, dtype=np.int32),
+           np.arange(2, 13, dtype=np.int32),
+           np.arange(2, 13, dtype=np.int32),      # shared prefix (paged)
+           np.arange(4, 25, dtype=np.int32)]      # multi-chunk
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(schedule="hybrid", prefill_chunk=8),
+    dict(cache_kind="paged", block_size=8),
+    dict(cache_kind="paged", block_size=8, schedule="hybrid", prefill_chunk=8),
+], ids=["dense/decode-only", "dense/hybrid", "paged/decode-only", "paged/hybrid"])
+def test_async_matches_sync_greedy(model_params, kw):
+    model, params = model_params
+    s_reqs, s_stats, _ = _serve(model, params, PROMPTS, async_mode=False, **kw)
+    a_reqs, a_stats, _ = _serve(model, params, PROMPTS, async_mode=True, **kw)
+    for s, a in zip(s_reqs, a_reqs):
+        assert a.done
+        assert a.in_flight == 0            # pipeline fully drained
+        assert s.out_tokens == a.out_tokens, (s.uid, s.out_tokens, a.out_tokens)
+    assert a_stats.generated == s_stats.generated
+
+
+def test_async_matches_sync_paged_preemption(model_params):
+    """A pool sized to force preemption: the async engine must drain its
+    pipeline before evicting so the refolded prompt is exact."""
+    model, params = model_params
+    prompts = [np.arange(1, 10, dtype=np.int32),
+               np.arange(3, 8, dtype=np.int32)]
+    kw = dict(cache_kind="paged", block_size=4, n_blocks=9,
+              schedule="hybrid", prefill_chunk=8)
+    s_reqs, _, _ = _serve(model, params, prompts, async_mode=False,
+                          n_new=10, **kw)
+    a_reqs, a_stats, eng = _serve(model, params, prompts, async_mode=True,
+                                  n_new=10, **kw)
+    assert a_stats.preemptions >= 1
+    for s, a in zip(s_reqs, a_reqs):
+        assert s.out_tokens == a.out_tokens, (s.uid, s.out_tokens, a.out_tokens)
+    assert eng.pool.in_use == 0
+
+
+def test_async_eos_one_step_late_is_masked(model_params):
+    """EOS is observed one step after the speculative next step was
+    dispatched; the extra token must be masked, leaving output identical
+    to the sync engine's."""
+    model, params = model_params
+    prompt = np.arange(1, 5, dtype=np.int32)
+    ref, _, _ = _serve(model, params, [prompt], async_mode=False, n_new=8,
+                       n_slots=1)
+    eos = ref[0].out_tokens[2]             # stop at the 3rd generated token
+    for async_mode in (False, True):
+        eng = Engine(model, params, n_slots=1, max_seq=32,
+                     async_mode=async_mode)
+        r = Request(uid=0, prompt=prompt, max_new_tokens=8, eos_id=eos)
+        eng.submit(r)
+        eng.run()
+        assert r.out_tokens == ref[0].out_tokens[:3], (async_mode, r.out_tokens)
+        assert r.in_flight == 0

@@ -156,8 +156,10 @@ def test_hybrid_compiles_within_bucket_set():
     n_buckets = len(eng.sched.buckets)
     assert eng._fused._cache_size() <= n_buckets
     assert eng._solo._cache_size() <= n_buckets
-    # decode: one fixed shape regardless of the length mix
-    assert eng._decode._cache_size() == 1
+    # decode: one fixed shape regardless of the length mix (the async
+    # engine dispatches the sampled variant, never the logits step)
+    decode_jit = eng._decode_sampled if eng.async_mode else eng._decode
+    assert decode_jit._cache_size() == 1
 
 
 # ------------------------------------------------------ latency accounting
