@@ -107,13 +107,15 @@ def live_run(print_fn=print):
     assert identical, "paged decode diverged from dense"
 
 
-def main(print_fn=print):
+def main(print_fn=print) -> dict:
     print_fn("# paged KV bench: same HBM budget, mixed sequence lengths")
     print_fn("arch,cache,effective_batch,resident_tokens,kv_bytes_per_token")
     gain = capacity_rows("llama3.2-1b", n_slots=32, max_seq=4096,
                          block_size=64, print_fn=print_fn)
     print_fn(f"# paged effective-batch gain at mixed lengths: {gain:.2f}x")
     live_run(print_fn)
+    # deterministic (eval_shape arithmetic): gated by ci_gate.py
+    return {"paged_batch_gain": gain}
 
 
 if __name__ == "__main__":

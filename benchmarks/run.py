@@ -8,6 +8,7 @@
   kernel_bench     —           Pallas kernels vs oracle (interpret mode)
   paged_bench      —           dense vs paged KV capacity + live equivalence
   scheduler_bench  —           decode-only vs hybrid TTFT, sync vs async
+  cluster_bench    —           replica scale-out + prefix-affinity routing
 
 ``python -m benchmarks.run [--smoke] [name ...]`` — default runs
 everything.  ``--smoke`` passes the down-sized CI workload to benches
@@ -23,6 +24,7 @@ import sys
 import traceback
 
 from benchmarks import (
+    cluster_bench,
     fig1_roofline,
     fig7_throughput,
     fig8_mfu,
@@ -42,6 +44,7 @@ ALL = {
     "kernel_bench": kernel_bench.main,
     "paged_bench": paged_bench.main,
     "scheduler_bench": scheduler_bench.main,
+    "cluster_bench": cluster_bench.main,
 }
 
 

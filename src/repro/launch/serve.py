@@ -21,6 +21,14 @@ on the host round-trip.  ``--async off`` is the conservative synchronous
 fallback (greedy outputs are token-identical either way).  Sampling is
 picked with ``--sample {greedy,temperature,top-k}`` plus
 ``--temperature`` / ``--top-k`` values.
+
+Add ``--replicas N [--route round_robin|least_loaded|prefix_affinity]``
+to serve from a :class:`~repro.serving.cluster.Cluster` of N engine
+replicas behind a shared global queue: the router places each request on
+the first replica (in policy order) that can admit it now, spilling over
+when the first choice is saturated.  ``prefix_affinity`` (paged cache
+only in effect) routes shared-prompt traffic to the replica already
+holding its prefix blocks.
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ from repro.core import balance
 from repro.core.placement import Env
 from repro.launch.mesh import make_host_mesh, mesh_axes
 from repro.models.registry import build_model
+from repro.serving.cluster import ROUTE_POLICIES, Cluster
 from repro.serving.engine import Engine, Request
 from repro.serving.sampler import SamplerConfig
 
@@ -78,6 +87,10 @@ def main():
     ap.add_argument("--token-budget", type=int, default=None,
                     help="hybrid: per-step token budget "
                          "(default: slots + prefill_chunk)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the shared global queue")
+    ap.add_argument("--route", choices=ROUTE_POLICIES, default="round_robin",
+                    help="replica routing policy (with --replicas > 1)")
     args = ap.parse_args()
 
     cfg = reduce_config(args.arch) if args.reduced else get_config(args.arch)
@@ -104,8 +117,8 @@ def main():
         sampler = SamplerConfig(
             temperature=temp, top_k=args.top_k if mode == "top-k" else 0
         )
-    eng = Engine(
-        model, params, n_slots=args.slots, max_seq=args.max_seq,
+    engine_kw = dict(
+        n_slots=args.slots, max_seq=args.max_seq,
         sampler=sampler,
         sub_batches=args.sub_batches,
         cache_kind=args.cache, block_size=args.block_size, n_blocks=args.blocks,
@@ -113,19 +126,34 @@ def main():
         token_budget=args.token_budget,
         async_mode=args.async_mode == "on",
     )
+    cluster = (
+        Cluster(model, params, args.replicas, route=args.route, **engine_kw)
+        if args.replicas > 1 else None
+    )
+    eng = cluster.engines[0] if cluster else Engine(model, params, **engine_kw)
+    serv = cluster if cluster else eng
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         plen = int(rng.integers(4, args.max_seq // 2))
         prompt = rng.integers(1, cfg.vocab, size=plen).astype(np.int32)
-        eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new))
+        serv.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new))
 
     t0 = time.time()
-    stats = eng.run()
+    stats = serv.run()
     dt = time.time() - t0
     print(f"mode: async={args.async_mode} sample={mode} "
           f"(T={sampler.temperature} top_k={sampler.top_k})")
+    if cluster:
+        print(f"cluster: replicas={args.replicas} route={args.route}")
+        print(f"requests={args.requests} {stats.summary()}")
+        print(f"wall {dt:.2f}s -> {stats.generated/dt:.1f} tok/s")
+        if args.cache == "paged":
+            for i, e in enumerate(cluster.engines):
+                print(f"pool[r{i}]: {e.pool.stats}")
+        return
     print(f"requests={args.requests} prefills={stats.prefills} "
           f"prefill_chunks={stats.prefill_chunks} "
+          f"boundary_packs={stats.boundary_packs} "
           f"decode_steps={stats.decode_steps} engine_steps={stats.engine_steps} "
           f"generated={stats.generated} peak_active={stats.peak_active}")
     print(f"latency: mean TTFT {stats.mean_ttft_steps:.1f} engine steps, "

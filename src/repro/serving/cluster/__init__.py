@@ -1,0 +1,18 @@
+"""Cluster serving tier: routed engine replicas behind one global queue.
+
+See :mod:`repro.serving.cluster.cluster` for the stepping model,
+:mod:`repro.serving.cluster.router` for the routing policies, and
+:mod:`repro.serving.cluster.stats` for the aggregate metrics.
+"""
+from repro.serving.cluster.cluster import Cluster
+from repro.serving.cluster.router import ROUTE_POLICIES, Router, RouterStats
+from repro.serving.cluster.stats import ClusterStats, ReplicaStats
+
+__all__ = [
+    "Cluster",
+    "Router",
+    "RouterStats",
+    "ROUTE_POLICIES",
+    "ClusterStats",
+    "ReplicaStats",
+]

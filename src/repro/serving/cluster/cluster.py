@@ -1,0 +1,124 @@
+"""N engine replicas behind one admission/routing front-end.
+
+The paper scales KV capacity by adding HPU cards; the serving-tier
+analogue is data-parallel engine replicas — each :class:`Engine` owns
+its own params reference, cache, scheduler, and block pool (on CPU tests
+they share one device; on a mesh each replica gets its own slice) — with
+a **shared global request queue** in front.  Requests wait globally and
+are placed by a :class:`~repro.serving.cluster.router.Router` the moment
+some replica can admit them, so placement decisions always see current
+load and current prefix residency, not submission-time state.
+
+Stepping is an interleaved loop: one cluster *round* dispatches the
+queue, then steps every replica once.  Replicas never block each other —
+a replica with nothing to do returns from ``step`` immediately — and the
+async dispatch-ahead pipeline inside each engine keeps device work
+overlapped across the round exactly as it does standalone.
+
+Dispatch is FCFS with head-of-line blocking: when no replica can admit
+the queue head, the whole queue waits (mirrors each engine's own FCFS
+admission, keeps preempted-request recovery exact, and makes cluster
+output order deterministic).  Greedy outputs are token-identical
+per request to a single engine serving the same prompts — routing moves
+work, never changes it.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+from repro.serving.cluster.router import Router
+from repro.serving.cluster.stats import ClusterStats, ReplicaStats
+from repro.serving.engine import Engine, Request
+
+Pytree = object
+
+
+class Cluster:
+    def __init__(
+        self,
+        model,
+        params: Pytree,
+        n_replicas: int,
+        route: str = "round_robin",
+        **engine_kw,
+    ):
+        if n_replicas < 1:
+            raise ValueError(f"need >= 1 replica, got {n_replicas}")
+        self.engines = [Engine(model, params, **engine_kw) for _ in range(n_replicas)]
+        self.router = Router(self.engines, route)
+        self.max_seq = self.engines[0].max_seq
+        self.queue: deque[Request] = deque()
+        self.rounds = 0
+        self.placement: dict[int, int] = {}    # uid -> replica, exactly once
+        self._submit_round: dict[int, int] = {}
+        self.queue_wait_sum = 0
+        self.queue_wait_count = 0
+
+    # ------------------------------------------------------------- requests
+    def submit(self, req: Request) -> None:
+        """Enqueue on the shared global queue (uids must be unique — the
+        routed-exactly-once invariant is keyed on them).  The engine's
+        own prompt-length check is applied eagerly so an oversized prompt
+        fails at submission, not rounds later at dispatch."""
+        if len(req.prompt) >= self.max_seq - 1:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens does not fit max_seq="
+                f"{self.max_seq} (needs len(prompt) <= max_seq - 2)"
+            )
+        if req.uid in self.placement or req.uid in self._submit_round:
+            raise ValueError(f"duplicate request uid {req.uid}")
+        self.queue.append(req)
+        self._submit_round[req.uid] = self.rounds
+
+    def _dispatch_queue(self) -> None:
+        """Route queued requests FCFS until the head cannot be admitted
+        anywhere (head-of-line wait: it is re-routed next round, when
+        completions have freed capacity or moved the affinity target)."""
+        while self.queue:
+            req = self.queue[0]
+            idx = self.router.route(req)
+            if idx is None:
+                break
+            self.queue.popleft()
+            assert req.uid not in self.placement, "request routed twice"
+            self.placement[req.uid] = idx
+            self.queue_wait_sum += self.rounds - self._submit_round.pop(req.uid)
+            self.queue_wait_count += 1
+            self.engines[idx].submit(req)
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One cluster round: admit from the global queue, then step
+        every replica once.  Returns whether any work remains."""
+        self._dispatch_queue()
+        self.rounds += 1
+        busy = False
+        for eng in self.engines:
+            busy = eng.step() or busy
+        return busy or bool(self.queue)
+
+    def run(self, max_rounds: int = 10_000) -> ClusterStats:
+        for _ in range(max_rounds):
+            if not self.step():
+                break
+        for eng in self.engines:
+            if eng.async_mode:
+                eng._drain()    # settle out_tokens if max_rounds truncated
+        return self.stats()
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> ClusterStats:
+        rs = self.router.stats
+        return ClusterStats(
+            rounds=self.rounds,
+            replicas=[
+                ReplicaStats(replica=i, routed=rs.routed[i],
+                             n_slots=len(eng.slots), engine=eng.stats)
+                for i, eng in enumerate(self.engines)
+            ],
+            spills=rs.spills,
+            prefix_hit_tokens=rs.prefix_hit_tokens,
+            probed_tokens=rs.probed_tokens,
+            queue_wait_sum=self.queue_wait_sum,
+            queue_wait_count=self.queue_wait_count,
+        )

@@ -1,0 +1,98 @@
+"""Cluster-level statistics: per-replica rows + aggregate scale-out view.
+
+The paper's scale-out claim is about *aggregate* serving capacity — HPU
+cards added to a node raise total KV residency and therefore total
+decode throughput.  The cluster analogue reported here:
+
+* ``tokens_per_round`` — generated tokens per cluster round (one round
+  steps every replica once), the machine-independent scaling metric
+  ``benchmarks/cluster_bench.py`` gates on;
+* per-replica ``utilization`` — the fraction of each replica's
+  slot-rounds that produced a token (idle replicas drag this down);
+* ``load_imbalance`` — max/mean of per-replica generated tokens: 1.0 is
+  a perfectly level cluster, and a bad router shows up here first;
+* ``mean_queue_wait_rounds`` — rounds a request spent in the *global*
+  queue before any replica could admit it (per-replica TTFT is measured
+  by each engine separately).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.engine import EngineStats
+
+
+@dataclasses.dataclass
+class ReplicaStats:
+    """One replica's contribution, as the cluster saw it."""
+
+    replica: int
+    routed: int                 # requests the router placed here
+    n_slots: int
+    engine: EngineStats         # the replica engine's own counters
+
+    def utilization(self, rounds: int) -> float:
+        """Generated tokens per slot-round offered to this replica."""
+        return self.engine.generated / max(rounds * self.n_slots, 1)
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    rounds: int
+    replicas: list[ReplicaStats]
+    spills: int                 # requests admitted off their first choice
+    prefix_hit_tokens: int      # resident-prefix tokens at routing time
+    probed_tokens: int          # total prompt tokens routed
+    queue_wait_sum: int         # rounds spent in the global queue
+    queue_wait_count: int
+
+    @property
+    def generated(self) -> int:
+        return sum(r.engine.generated for r in self.replicas)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(r.engine.preemptions for r in self.replicas)
+
+    @property
+    def tokens_per_round(self) -> float:
+        return self.generated / max(self.rounds, 1)
+
+    @property
+    def mean_queue_wait_rounds(self) -> float:
+        return self.queue_wait_sum / max(self.queue_wait_count, 1)
+
+    @property
+    def mean_ttft_steps(self) -> float:
+        """Request-weighted mean TTFT across replicas, in engine steps."""
+        total = sum(r.engine.ttft_steps_sum for r in self.replicas)
+        count = sum(r.engine.ttft_count for r in self.replicas)
+        return total / max(count, 1)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of routed prompt tokens already resident on the
+        chosen replica (the prefix-affinity win metric)."""
+        return self.prefix_hit_tokens / max(self.probed_tokens, 1)
+
+    @property
+    def load_imbalance(self) -> float:
+        """max/mean of per-replica generated tokens (1.0 = level)."""
+        gen = [r.engine.generated for r in self.replicas]
+        mean = sum(gen) / max(len(gen), 1)
+        return max(gen) / mean if mean > 0 else 1.0
+
+    def summary(self) -> str:
+        per = " ".join(
+            f"r{r.replica}:routed={r.routed},gen={r.engine.generated},"
+            f"util={r.utilization(self.rounds):.2f}"
+            for r in self.replicas
+        )
+        return (
+            f"rounds={self.rounds} generated={self.generated} "
+            f"tokens/round={self.tokens_per_round:.2f} "
+            f"ttft={self.mean_ttft_steps:.1f} "
+            f"queue_wait={self.mean_queue_wait_rounds:.1f} "
+            f"imbalance={self.load_imbalance:.2f} spills={self.spills} "
+            f"prefix_hit_rate={self.prefix_hit_rate:.2f} | {per}"
+        )

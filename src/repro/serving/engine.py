@@ -54,7 +54,10 @@ device op threads ``self.cache`` (and ``self.staging``/``tok_state``),
 so host bookkeeping done at dispatch time (block flushes, table syncs,
 resets) lands *after* the in-flight step's writes.  The one host action
 that needs observed token values — preemption's exact-recovery refold —
-drains the pipeline first.
+observes only the victim slot's in-flight tokens first
+(:meth:`Engine._observe_victim`), keeping the rest of the pipeline in
+flight; the full drain is paid only when eviction is otherwise
+imminent (an unobserved completion elsewhere may still avert it).
 
 The decode step is wrapped by ``core.pipeline.pipelined_step`` when
 ``sub_batches > 1`` (paper Fig. 3), and attention runs through
@@ -108,11 +111,13 @@ class Request:
 class EngineStats:
     prefills: int = 0               # completed request prefills
     prefill_chunks: int = 0         # hybrid: chunks executed
+    boundary_packs: int = 0         # hybrid: head chunks packed at a boundary
     decode_steps: int = 0           # model steps that carried a decode batch
     engine_steps: int = 0           # normalized step clock (see module doc)
     generated: int = 0
     peak_active: int = 0
     preemptions: int = 0
+    victim_drains: int = 0          # async: partial (victim-only) drains
     ttft_steps_sum: int = 0
     ttft_count: int = 0
 
@@ -124,6 +129,22 @@ class EngineStats:
     @property
     def tokens_per_step(self) -> float:
         return self.generated / max(self.engine_steps, 1)
+
+
+@dataclasses.dataclass
+class EngineLoad:
+    """One replica's load snapshot, read by the cluster router.
+
+    ``inflight_tokens`` counts KV positions committed to this replica —
+    prompt plus generated (observed and dispatched) tokens of every
+    resident request, plus the prompt tokens of anything waiting in the
+    local queue (a preempted request is still this replica's work).
+    """
+
+    free_slots: int
+    queued: int
+    inflight_tokens: int
+    free_blocks: int | None         # paged only; None for the dense cache
 
 
 @dataclasses.dataclass
@@ -144,6 +165,8 @@ class _PendingStep:
     eos: jax.Array | None                # (B,) bool EOS hits (device)
     work: PrefillChunk | None = None     # chunk fused into this step
     pre_tok: jax.Array | None = None     # (1,) first token when work.last
+    work2: PrefillChunk | None = None    # boundary-packed second chunk
+    pre_tok2: jax.Array | None = None    # (1,) first token when work2.last
 
 
 class Engine:
@@ -297,6 +320,27 @@ class Engine:
                     lengths = cache["lengths"].at[slot].set(off + nv)
                     return dec_logits, pre_logits, {**cache, "lengths": lengths}
 
+                # boundary packing (Sarathi-SC): prompt A's final chunk and
+                # prompt B's head chunk in ONE dispatch — both prefills ride
+                # the same weight stream as the decode batch
+                def _fused2(params, cache, dec_tokens, tokA, slotA, offA, nvA,
+                            tokB, slotB, offB, nvB):
+                    la, cache = model.prefill_step(params, cache, tokA, slotA, offA, nvA)
+                    lb, cache = model.prefill_step(params, cache, tokB, slotB, offB, nvB)
+                    dec_logits, cache = model.decode_step(params, cache, dec_tokens)
+                    lengths = (cache["lengths"].at[slotA].set(offA + nvA)
+                               .at[slotB].set(offB + nvB))
+                    return dec_logits, la, lb, {**cache, "lengths": lengths}
+
+                def _solo2(params, cache, tokA, slotA, offA, nvA,
+                           tokB, slotB, offB, nvB):
+                    la, cache = model.prefill_step(params, cache, tokA, slotA, offA, nvA)
+                    lb, cache = model.prefill_step(params, cache, tokB, slotB, offB, nvB)
+                    return la, lb, cache
+
+                self._fused2 = jax.jit(_fused2)
+                self._solo2 = jax.jit(_solo2)
+
             self._fused = jax.jit(_fused)
             return
 
@@ -358,6 +402,39 @@ class Engine:
                 state = jnp.where(last, tok_state.at[slot].set(pre_tok[0]), tok_state)
                 return state, pre_tok, cache
 
+            # boundary packing (Sarathi-SC), async twins: A always
+            # completes (its chunk is final by construction), B's first
+            # token splices only when its head chunk is also its last
+            def _fused2_async(params, cache, tok_state, tokA, slotA, offA, nvA,
+                              tokB, slotB, offB, nvB, rng, eos_ids, lastB):
+                r_dec, r_a, r_b = jax.random.split(rng, 3)
+                la, cache = model.prefill_step(params, cache, tokA, slotA, offA, nvA)
+                lb, cache = model.prefill_step(params, cache, tokB, slotB, offB, nvB)
+                dec_logits, cache = model.decode_step(params, cache, tok_state)
+                lengths = (cache["lengths"].at[slotA].set(offA + nvA)
+                           .at[slotB].set(offB + nvB))
+                cache = {**cache, "lengths": lengths}
+                toks = sample_on_device(dec_logits, r_dec, sampler)
+                ta = sample_on_device(la, r_a, sampler)
+                tb = sample_on_device(lb, r_b, sampler)
+                state = toks.at[slotA].set(ta[0])
+                state = jnp.where(lastB, state.at[slotB].set(tb[0]), state)
+                return state, toks, toks == eos_ids, ta, tb, cache
+
+            def _solo2_async(params, cache, tok_state, tokA, slotA, offA, nvA,
+                             tokB, slotB, offB, nvB, rng, lastB):
+                r_a, r_b = jax.random.split(rng)
+                la, cache = model.prefill_step(params, cache, tokA, slotA, offA, nvA)
+                lb, cache = model.prefill_step(params, cache, tokB, slotB, offB, nvB)
+                ta = sample_on_device(la, r_a, sampler)
+                tb = sample_on_device(lb, r_b, sampler)
+                state = tok_state.at[slotA].set(ta[0])
+                state = jnp.where(lastB, state.at[slotB].set(tb[0]), state)
+                return state, ta, tb, cache
+
+            self._fused2 = jax.jit(_fused2_async)
+            self._solo2 = jax.jit(_solo2_async)
+
         self._fused = jax.jit(_fused_async)
         self._solo = jax.jit(_solo_async)
 
@@ -372,6 +449,54 @@ class Engine:
             )
         req.submit_step = self.stats.engine_steps
         self.sched.submit(req)
+
+    # ------------------------------------------------- cluster router hooks
+    def load(self) -> EngineLoad:
+        """Load snapshot for ``least_loaded`` routing (read-only).  A
+        chunked prefill in flight (``sched.inflight``) is committed work
+        on a reserved slot even though the request is in neither
+        ``slots`` nor the queue yet — count both."""
+        inflight = sum(
+            len(r.prompt) + len(r.out_tokens) + r.in_flight
+            for r in self.slots if r is not None
+        )
+        inflight += sum(len(r.prompt) + len(r.out_tokens)
+                        for r in self.sched.queue)
+        fl = self.sched.inflight
+        if fl is not None:
+            inflight += fl.total
+        return EngineLoad(
+            free_slots=self.slots.count(None) - (0 if fl is None else 1),
+            queued=len(self.sched),
+            inflight_tokens=inflight,
+            free_blocks=(self.pool.free_count if self.cache_kind == "paged"
+                         else None),
+        )
+
+    def can_admit(self, req: Request) -> bool:
+        """Would ``req`` be this replica's *next* prefill?  The cluster
+        router's spill-over probe: read-only and conservative (counts
+        resident prefix hits but never blocks a preemption could free).
+        A chunked prefill already in flight counts as running — its slot
+        is subtracted and the newcomer starts right behind it, a bounded
+        wait — but any locally *queued* request means an unbounded park,
+        so the answer is no."""
+        fl = self.sched.inflight
+        free = self.slots.count(None) - (0 if fl is None else 1)
+        if len(self.sched) or free < 1:
+            return False
+        if self.cache_kind != "paged":
+            return True
+        prompt = np.asarray(req.prompt, np.int32)
+        return self.manager.admit_shortfall(prompt) <= self.pool.free_count
+
+    def probe_prefix(self, prompt: np.ndarray) -> int:
+        """Longest resident prompt prefix, in tokens (0 for the dense
+        cache — it has no prefix reuse).  Side-effect free; the router's
+        ``prefix_affinity`` score."""
+        if self.cache_kind != "paged":
+            return 0
+        return self.manager.probe_prefix(np.asarray(prompt, np.int32))
 
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -442,6 +567,10 @@ class Engine:
             req = rec.work.req
             req.in_flight -= 1
             req.out_tokens.append(int(np.asarray(rec.pre_tok)[0]))
+        if rec.work2 is not None and rec.work2.last:
+            req = rec.work2.req
+            req.in_flight -= 1
+            req.out_tokens.append(int(np.asarray(rec.pre_tok2)[0]))
         if rec.tokens is None:
             return
         toks = np.asarray(rec.tokens)
@@ -469,6 +598,54 @@ class Engine:
         while self._pending:
             self._observe(self._pending.popleft())
         self._flush_first()
+
+    def _observe_victim(self, slot: int) -> None:
+        """Observe only ``slot``'s in-flight tokens, in dispatch order,
+        leaving every other slot's tokens (and the pending records
+        themselves) in flight — the preemption refold needs *one* slot's
+        exact history, so the rest of the pipeline stays overlapped
+        instead of paying a full drain.  The victim's entries are
+        consumed out of each record (``reqs``/``work`` cleared) so a
+        later :meth:`_observe` of the same record skips them.  No-op when
+        nothing of the victim's is in flight (sync mode always)."""
+        req = self.slots[slot]
+        if req is None or req.in_flight == 0:
+            return
+        self.stats.victim_drains += 1
+        kept = []
+        for r, tok in self._first_pending:
+            if r is req:
+                r.in_flight -= 1
+                r.out_tokens.append(int(np.asarray(tok)[0]))
+            else:
+                kept.append((r, tok))
+        self._first_pending[:] = kept
+        for rec in self._pending:
+            if rec.work is not None and rec.work.last and rec.work.req is req:
+                req.in_flight -= 1
+                req.out_tokens.append(int(np.asarray(rec.pre_tok)[0]))
+                rec.work = None          # consumed; _observe must not re-apply
+            if rec.work2 is not None and rec.work2.last and rec.work2.req is req:
+                req.in_flight -= 1
+                req.out_tokens.append(int(np.asarray(rec.pre_tok2)[0]))
+                rec.work2 = None
+            if rec.tokens is not None and rec.reqs.get(slot) is req:
+                del rec.reqs[slot]
+                req.in_flight -= 1
+                if req.done:
+                    continue
+                req.out_tokens.append(int(np.asarray(rec.tokens[slot])))
+                self.stats.generated += 1
+                length = len(req.prompt) + len(req.out_tokens)
+                if (
+                    bool(np.asarray(rec.eos[slot]))
+                    or len(req.out_tokens) >= req.max_new_tokens
+                    or length >= self.max_seq - 1
+                ):
+                    req.done = True
+                    req.finish_step = rec.step
+                    self._release_slot(slot, req)
+        assert req.in_flight == 0, "victim drain left tokens in flight"
 
     def _release_slot(self, slot: int, req: Request) -> None:
         if self.slots[slot] is not req:
@@ -586,11 +763,16 @@ class Engine:
         start = min(len(matched) * bs, (len(full) - 1) // bs * bs)
         return start, len(full)
 
-    def _complete_chunk(self, work: PrefillChunk, pre_logits):
+    def _complete_chunk(self, work: PrefillChunk, pre_logits,
+                        advance: bool = True):
         """Commit an executed chunk (sync mode: host-samples the first
-        token from the chunk's logits when it completes the prompt)."""
+        token from the chunk's logits when it completes the prompt).
+        ``advance=False`` when the scheduler was already advanced at
+        boundary-packing time (the next prompt had to begin before the
+        fused dispatch was built)."""
         self._flush_chunk_blocks(work)
-        self.sched.advance(work)
+        if advance:
+            self.sched.advance(work)
         if work.last:
             req = work.req
             self.slots[work.slot] = req
@@ -599,17 +781,21 @@ class Engine:
                     self.cache, work.slot, self.manager.tables[work.slot],
                     work.start + work.n_valid,
                 )
-            self._inflight_tokens = None
+            if self.sched.inflight is None:
+                # a boundary-packed successor may already have pinned its
+                # own prompt here — only clear when no prefill is live
+                self._inflight_tokens = None
             self._sample_prefill(req, work.slot, pre_logits)
 
-    def _complete_chunk_async(self, work: PrefillChunk):
+    def _complete_chunk_async(self, work: PrefillChunk, advance: bool = True):
         """Async twin of :meth:`_complete_chunk`: the fused step already
         sampled the first token on device and spliced it into
         ``tok_state``; the host only does block/table bookkeeping (safe at
         dispatch time — device data-flow orders it after the step) and
         records that one more token is in flight."""
         self._flush_chunk_blocks(work)
-        self.sched.advance(work)
+        if advance:
+            self.sched.advance(work)
         if work.last:
             req = work.req
             self.slots[work.slot] = req
@@ -618,7 +804,9 @@ class Engine:
                     self.cache, work.slot, self.manager.tables[work.slot],
                     work.start + work.n_valid,
                 )
-            self._inflight_tokens = None
+            if self.sched.inflight is None:
+                # boundary-packed successor may have pinned its prompt
+                self._inflight_tokens = None
             req.admit_base = len(req.out_tokens)
             req.in_flight += 1
             self._eos_dev = paged_dev.set_stop_id(
@@ -667,9 +855,16 @@ class Engine:
         sequence when the pool runs dry.  Returns the surviving slots.
 
         Async: a preemption decision snapshots ``out_tokens`` for exact
-        recovery, so the pipeline is drained first; completions the drain
-        reveals may free enough blocks to avoid evicting at all, so the
-        allocation is retried before picking a victim."""
+        recovery, but only the *victim's* history has to be exact — so
+        its in-flight tokens are observed first (:meth:`_observe_victim`)
+        while every other slot's stay in flight and the pipeline keeps
+        its overlap.  The observed tokens may reveal the victim already
+        finished (EOS lags one step): then its blocks are free and no
+        eviction is needed.  Only when the victim is genuinely alive is
+        the rest of the pipeline drained before evicting — an unobserved
+        EOS on *another* slot may free enough blocks to avoid the
+        preemption entirely, and one settled iteration is far cheaper
+        than re-prefilling the victim's whole KV."""
         alive = set(active)
         for slot in sorted(active, key=lambda s: self.manager.admit_seq[s]):
             while slot in alive:
@@ -680,11 +875,15 @@ class Engine:
                     slot, self._kv_len(slot)
                 )
                 if directive == "oom":
-                    if self._pending:
-                        self._drain()
-                        alive = {s for s in alive if self.slots[s] is not None}
-                        continue            # retry with drained state
                     victim = self.manager.youngest(alive)
+                    self._observe_victim(victim)
+                    if self.slots[victim] is None:
+                        alive.discard(victim)   # finished: blocks already free
+                        continue                # retry without evicting
+                    if self._pending or self._first_pending:
+                        self._drain()       # settle completions elsewhere
+                        alive = {s for s in alive if self.slots[s] is not None}
+                        continue            # retry before paying a re-prefill
                     self._preempt(victim)
                     alive.discard(victim)
                     continue                # retry (unless we evicted slot)
@@ -697,6 +896,71 @@ class Engine:
                     )
                 break
         return [s for s in active if s in alive]
+
+    # ------------------------------------------- boundary packing (Sarathi-SC)
+    def _chunk_arrays(self, work: PrefillChunk):
+        chunk = np.zeros((1, work.bucket), np.int32)
+        chunk[0, :work.n_valid] = self._inflight_tokens[
+            work.start:work.start + work.n_valid
+        ]
+        return jnp.asarray(chunk), np.int32(work.start), np.int32(work.n_valid)
+
+    def _boundary_chunk(self, budget: int, taken: int) -> PrefillChunk | None:
+        """The final chunk of the prompt on slot ``taken`` was advanced
+        and left ``budget`` tokens of this iteration's dispatch unused:
+        begin the next queued prompt and pack its head chunk into the
+        *same* dispatch (Sarathi-SC boundary packing — both chunks ride
+        one weight stream via ``_fused2``/``_solo2``), so the token
+        budget stays full across prompt boundaries.  Dense cache only:
+        the paged staging cache has a single prefill lane, so a second
+        in-flight prompt cannot stage its chunk (ROADMAP follow-up).
+        ``taken`` is excluded from the slot choice — the finishing
+        prompt claims it only after this dispatch completes."""
+        sched = self.sched
+        if budget <= 0 or sched.inflight is not None or not len(sched):
+            return None
+        free = [s for s in self._free_slots() if s != taken]
+        if not free:
+            return None
+        req = sched.pop()
+        slot = free[0]
+        start, total = self._begin_prefill(req, slot)
+        sched.begin(req, slot, start, total)
+        if req.admit_step < 0:
+            req.admit_step = self.stats.engine_steps
+        return sched.pack_boundary(budget)
+
+    def _exec_solo_sync(self, work: PrefillChunk):
+        """Dispatch one chunk through the solo prefill program (sync
+        mode); returns the chunk's logits."""
+        chunk, off, nv = self._chunk_arrays(work)
+        if self.cache_kind == "paged":
+            pre_logits, self.staging = self._solo(
+                self.params, self.staging, chunk, np.int32(0), off, nv
+            )
+        else:
+            pre_logits, self.cache = self._solo(
+                self.params, self.cache, chunk, np.int32(work.slot), off, nv
+            )
+        return pre_logits
+
+    def _exec_solo_async(self, work: PrefillChunk, rng):
+        """Async twin of :meth:`_exec_solo_sync`: the solo program samples
+        on device and splices a completed prompt's first token into
+        ``tok_state``; returns the in-flight ``pre_tok`` array."""
+        chunk, off, nv = self._chunk_arrays(work)
+        wslot = np.int32(work.slot)
+        if self.cache_kind == "paged":
+            self._tok_state, pre_tok, self.staging = self._solo(
+                self.params, self.staging, self._tok_state,
+                chunk, wslot, off, nv, rng, work.last,
+            )
+        else:
+            self._tok_state, pre_tok, self.cache = self._solo(
+                self.params, self.cache, self._tok_state,
+                chunk, wslot, off, nv, rng, work.last,
+            )
+        return pre_tok
 
     # ----------------------------------------------------------------- step
     def _decode_tokens(self) -> jax.Array:
@@ -808,16 +1072,42 @@ class Engine:
 
         self.stats.engine_steps += 1
         self.stats.peak_active = max(self.stats.peak_active, len(active))
-        if work is not None:
-            chunk = np.zeros((1, work.bucket), np.int32)
-            chunk[0, :work.n_valid] = self._inflight_tokens[
-                work.start:work.start + work.n_valid
-            ]
-            chunk = jnp.asarray(chunk)
-            off, nv = np.int32(work.start), np.int32(work.n_valid)
 
-        dec_logits = pre_logits = None
-        if active and work is not None:
+        # Sarathi-SC boundary packing (dense): when `work` finishes its
+        # prompt, the next prompt begins *now* and its head chunk joins
+        # the same dispatch, filling the budget the small final chunk
+        # left unused.  A's chunk arrays are built before _begin_prefill
+        # repoints _inflight_tokens at B.
+        work2 = None
+        pre_advanced = False
+        if work is not None:
+            chunk, off, nv = self._chunk_arrays(work)
+            if work.last and self.cache_kind != "paged" and len(sched):
+                sched.advance(work)     # A rides this dispatch regardless
+                pre_advanced = True
+                work2 = self._boundary_chunk(
+                    sched.token_budget - len(active) - work.n_valid, work.slot
+                )
+                if work2 is not None:
+                    chunk2, off2, nv2 = self._chunk_arrays(work2)
+
+        dec_logits = pre_logits = logits2 = None
+        if work2 is not None:
+            self.stats.boundary_packs += 1
+            if active:
+                dec_logits, pre_logits, logits2, self.cache = self._fused2(
+                    self.params, self.cache, self._decode_tokens(),
+                    chunk, np.int32(work.slot), off, nv,
+                    chunk2, np.int32(work2.slot), off2, nv2,
+                )
+                self.stats.decode_steps += 1
+            else:
+                pre_logits, logits2, self.cache = self._solo2(
+                    self.params, self.cache,
+                    chunk, np.int32(work.slot), off, nv,
+                    chunk2, np.int32(work2.slot), off2, nv2,
+                )
+        elif active and work is not None:
             if self.cache_kind == "paged":
                 dec_logits, pre_logits, self.cache, self.staging = self._fused(
                     self.params, self.cache, self.staging,
@@ -835,20 +1125,16 @@ class Engine:
             )
             self.stats.decode_steps += 1
         else:
-            if self.cache_kind == "paged":
-                pre_logits, self.staging = self._solo(
-                    self.params, self.staging, chunk, np.int32(0), off, nv
-                )
-            else:
-                pre_logits, self.cache = self._solo(
-                    self.params, self.cache, chunk, np.int32(work.slot), off, nv
-                )
+            pre_logits = self._exec_solo_sync(work)
 
         if active:
             self._finish_decode(active, dec_logits)
         if work is not None:
             self.stats.prefill_chunks += 1
-            self._complete_chunk(work, pre_logits)
+            self._complete_chunk(work, pre_logits, advance=not pre_advanced)
+        if work2 is not None:
+            self.stats.prefill_chunks += 1
+            self._complete_chunk(work2, logits2)
         return any(s is not None for s in self.slots) or sched.has_work()
 
     def _step_hybrid_async(self) -> bool:
@@ -883,17 +1169,42 @@ class Engine:
         self.stats.engine_steps += 1
         self.stats.peak_active = max(self.stats.peak_active, len(active))
         rng = self._step_rng()
-        if work is not None:
-            chunk = np.zeros((1, work.bucket), np.int32)
-            chunk[0, :work.n_valid] = self._inflight_tokens[
-                work.start:work.start + work.n_valid
-            ]
-            chunk = jnp.asarray(chunk)
-            off, nv = np.int32(work.start), np.int32(work.n_valid)
-            wslot = np.int32(work.slot)
 
-        toks = eos = pre_tok = None
-        if active and work is not None:
+        # boundary packing, async twin (see _step_hybrid): the next
+        # prompt's head chunk joins the same sampled dispatch
+        work2 = None
+        pre_advanced = False
+        if work is not None:
+            chunk, off, nv = self._chunk_arrays(work)
+            wslot = np.int32(work.slot)
+            if work.last and self.cache_kind != "paged" and len(sched):
+                sched.advance(work)
+                pre_advanced = True
+                work2 = self._boundary_chunk(
+                    sched.token_budget - len(active) - work.n_valid, work.slot
+                )
+                if work2 is not None:
+                    chunk2, off2, nv2 = self._chunk_arrays(work2)
+                    wslot2 = np.int32(work2.slot)
+
+        toks = eos = pre_tok = pre_tok2 = None
+        if work2 is not None:
+            self.stats.boundary_packs += 1
+            if active:
+                (self._tok_state, toks, eos, pre_tok, pre_tok2,
+                 self.cache) = self._fused2(
+                    self.params, self.cache, self._tok_state,
+                    chunk, wslot, off, nv, chunk2, wslot2, off2, nv2,
+                    rng, self._eos_dev, work2.last,
+                )
+                self.stats.decode_steps += 1
+            else:
+                self._tok_state, pre_tok, pre_tok2, self.cache = self._solo2(
+                    self.params, self.cache, self._tok_state,
+                    chunk, wslot, off, nv, chunk2, wslot2, off2, nv2,
+                    rng, work2.last,
+                )
+        elif active and work is not None:
             if self.cache_kind == "paged":
                 (self._tok_state, toks, eos, pre_tok,
                  self.cache, self.staging) = self._fused(
@@ -914,16 +1225,7 @@ class Engine:
             self._tok_state = toks
             self.stats.decode_steps += 1
         else:
-            if self.cache_kind == "paged":
-                self._tok_state, pre_tok, self.staging = self._solo(
-                    self.params, self.staging, self._tok_state,
-                    chunk, wslot, off, nv, rng, work.last,
-                )
-            else:
-                self._tok_state, pre_tok, self.cache = self._solo(
-                    self.params, self.cache, self._tok_state,
-                    chunk, wslot, off, nv, rng, work.last,
-                )
+            pre_tok = self._exec_solo_async(work, rng)
 
         reqs = {}
         for i in active:
@@ -932,11 +1234,14 @@ class Engine:
             reqs[i] = req
         rec = _PendingStep(
             step=self.stats.engine_steps, reqs=reqs, tokens=toks, eos=eos,
-            work=work, pre_tok=pre_tok,
+            work=work, pre_tok=pre_tok, work2=work2, pre_tok2=pre_tok2,
         )
         if work is not None:
             self.stats.prefill_chunks += 1
-            self._complete_chunk_async(work)
+            self._complete_chunk_async(work, advance=not pre_advanced)
+        if work2 is not None:
+            self.stats.prefill_chunks += 1
+            self._complete_chunk_async(work2)
         self._dispatch(rec)
         return True
 

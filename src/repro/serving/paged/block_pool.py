@@ -58,6 +58,12 @@ class BlockPool:
     def in_use(self) -> int:
         return (self.n_blocks - 1) - len(self._free)
 
+    @property
+    def utilization(self) -> float:
+        """Fraction of usable blocks currently owned — the cluster
+        router's load signal for KV memory pressure."""
+        return self.in_use / max(self.n_blocks - 1, 1)
+
     # ----------------------------------------------------------- allocation
     def alloc(self) -> int:
         """Take a free block (refcount 1).  Raises when the pool is dry —
@@ -90,6 +96,11 @@ class BlockPool:
         if b is not None:
             self.stats.hash_hits += 1
         return b
+
+    def peek(self, key: Hashable) -> int | None:
+        """Stat-free :meth:`lookup`: read-only probes (the cluster
+        router's prefix-affinity scoring) must not count as cache hits."""
+        return self._key_to_block.get(key)
 
     def register(self, key: Hashable, block: int) -> None:
         # a colliding re-register (identical content written twice) keeps

@@ -38,6 +38,37 @@ class PagedCacheManager:
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.pool.block_size)
 
+    # ------------------------------------------------------ read-only probes
+    def probe_prefix(self, tokens: np.ndarray) -> int:
+        """Longest prefix of ``tokens`` already resident in the pool's
+        prefix hash, in tokens.  Side-effect free: no increfs, no
+        allocation, no stats — the cluster router calls this on every
+        replica per request to score prefix affinity, and a probe must
+        not perturb the replica it does not choose."""
+        bs = self.pool.block_size
+        need = self.blocks_for(len(tokens))
+        key, hit = None, 0
+        for j in range(need):
+            key = chain_key(key, tuple(int(t) for t in tokens[j * bs:(j + 1) * bs]))
+            if self.pool.peek(key) is None:
+                break
+            hit = min(len(tokens), (j + 1) * bs)
+        return hit
+
+    def admit_shortfall(self, tokens: np.ndarray) -> int:
+        """Fresh blocks an admission of ``tokens`` would allocate right
+        now: total blocks minus resident prefix hits, plus the decode
+        boundary headroom block when the prompt exactly fills its blocks.
+        Read-only (mirrors :meth:`try_admit`'s capacity check without
+        mutating anything) — the admission probe behind
+        ``Engine.can_admit``."""
+        bs = self.pool.block_size
+        need = self.blocks_for(len(tokens))
+        hit = self.probe_prefix(tokens)
+        matched = need if hit >= len(tokens) else hit // bs
+        headroom = 1 if (len(tokens) % bs == 0 and need < self.max_blocks) else 0
+        return need - matched + headroom
+
     def try_admit(self, slot: int, tokens: np.ndarray):
         """Reserve blocks for ``tokens`` in ``slot``.
 

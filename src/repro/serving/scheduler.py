@@ -175,21 +175,37 @@ class Scheduler:
 
     def _pack(self, active_slots: list[int]) -> Decision:
         work = None
-        if self.mode == "hybrid" and self.inflight is not None:
-            fl = self.inflight
-            budget = self.token_budget - len(active_slots)
-            remaining = fl.total - fl.pos
-            n = min(self.prefill_chunk, budget, remaining)
-            if self.block_size is not None and 0 < n < remaining:
-                # non-final chunks end on a KV block boundary so completed
-                # blocks flush to the pool as they fill
-                n = (fl.pos + n) // self.block_size * self.block_size - fl.pos
-            if n > 0:
-                work = PrefillChunk(
-                    req=fl.req, slot=fl.slot, start=fl.pos, n_valid=n,
-                    bucket=self.pick_bucket(n), last=fl.pos + n == fl.total,
-                )
+        if self.mode == "hybrid":
+            work = self._make_chunk(self.token_budget - len(active_slots))
         return Decision(decode_slots=list(active_slots), prefill=work)
+
+    def _make_chunk(self, budget: int) -> PrefillChunk | None:
+        """Clip the in-flight prompt's next chunk to ``budget`` tokens."""
+        fl = self.inflight
+        if fl is None or budget <= 0:
+            return None
+        remaining = fl.total - fl.pos
+        n = min(self.prefill_chunk, budget, remaining)
+        if self.block_size is not None and 0 < n < remaining:
+            # non-final chunks end on a KV block boundary so completed
+            # blocks flush to the pool as they fill
+            n = (fl.pos + n) // self.block_size * self.block_size - fl.pos
+        if n <= 0:
+            return None
+        return PrefillChunk(
+            req=fl.req, slot=fl.slot, start=fl.pos, n_valid=n,
+            bucket=self.pick_bucket(n), last=fl.pos + n == fl.total,
+        )
+
+    def pack_boundary(self, budget: int) -> PrefillChunk | None:
+        """Sarathi-SC boundary packing: when one prompt's *final* partial
+        chunk left part of the iteration's budget unused, fund the head
+        chunk of the next prompt with the leftover — the engine calls
+        this after :meth:`advance`-ing the final chunk and
+        :meth:`begin`-ing the next prompt, still inside the same
+        iteration, so the token budget stays full across prompt
+        boundaries instead of idling for a step."""
+        return self._make_chunk(budget)
 
     def advance(self, work: PrefillChunk) -> None:
         """Commit an executed chunk; the last chunk retires the in-flight

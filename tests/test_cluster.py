@@ -1,0 +1,309 @@
+"""Cluster serving tier: router invariants (exactly-once routing,
+spill-over, least-loaded monotonicity), side-effect-free prefix probes,
+N=2 cluster greedy equivalence with a single engine (dense and paged),
+and the engine-level satellites that feed the router — boundary packing
+and victim-only preemption drains."""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.reduced import reduce_config
+from repro.core.placement import Env
+from repro.models.registry import build_model
+from repro.serving.cluster import ROUTE_POLICIES, Cluster, Router
+from repro.serving.engine import Engine, EngineLoad, Request
+from repro.serving.paged.block_pool import BlockPool
+from repro.serving.paged.manager import PagedCacheManager
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = reduce_config("llama3.2-1b")
+    model = build_model(cfg, Env())
+    return model, model.init(jax.random.key(0))
+
+
+def _requests(prompts, n_new=5):
+    return [Request(uid=i, prompt=p, max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+
+
+def _serve_engine(model, params, prompts, n_new=5, **kw):
+    eng = Engine(model, params, n_slots=2, max_seq=32, **kw)
+    reqs = _requests(prompts, n_new)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return reqs
+
+
+def _serve_cluster(model, params, prompts, n_replicas=2, route="round_robin",
+                   n_new=5, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_seq", 32)
+    cl = Cluster(model, params, n_replicas, route=route, **kw)
+    reqs = _requests(prompts, n_new)
+    for r in reqs:
+        cl.submit(r)
+    stats = cl.run()
+    return reqs, stats, cl
+
+
+PROMPTS = [np.arange(1, 6, dtype=np.int32),
+           np.arange(7, 10, dtype=np.int32),
+           np.arange(2, 13, dtype=np.int32),
+           np.arange(2, 13, dtype=np.int32),      # shared prefix (paged)
+           np.arange(4, 25, dtype=np.int32)]      # multi-chunk
+
+
+# ------------------------------------------------------------ fake replicas
+class FakeEngine:
+    """Duck-typed replica for pure router tests."""
+
+    def __init__(self, admit=True, inflight=0, free_blocks=None, free_slots=1,
+                 prefix_hit=0):
+        self.admit = admit
+        self.inflight = inflight
+        self.free_blocks = free_blocks
+        self.free_slots = free_slots
+        self.prefix_hit = prefix_hit
+        self.submitted = []
+
+    def can_admit(self, req):
+        return self.admit
+
+    def load(self):
+        return EngineLoad(free_slots=self.free_slots, queued=0,
+                          inflight_tokens=self.inflight,
+                          free_blocks=self.free_blocks)
+
+    def probe_prefix(self, prompt):
+        return self.prefix_hit
+
+    def submit(self, req):
+        self.submitted.append(req)
+        self.inflight += len(req.prompt)
+
+
+def _req(n=4, uid=0):
+    return Request(uid=uid, prompt=np.arange(1, n + 1, dtype=np.int32),
+                   max_new_tokens=2)
+
+
+# ------------------------------------------------------------------- router
+def test_router_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        Router([FakeEngine()], "fastest")
+    with pytest.raises(ValueError):
+        Router([], "round_robin")
+
+
+def test_router_round_robin_cycles():
+    engines = [FakeEngine(), FakeEngine(), FakeEngine()]
+    router = Router(engines, "round_robin")
+    picks = [router.route(_req(uid=i)) for i in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+    assert router.stats.routed == [2, 2, 2]
+    assert router.stats.spills == 0
+    assert router.stats.total_routed == 6
+
+
+def test_router_spills_over_saturated_replica():
+    engines = [FakeEngine(admit=False), FakeEngine()]
+    router = Router(engines, "round_robin")
+    assert router.route(_req(uid=0)) == 1          # 0 full -> spill to 1
+    assert router.stats.spills == 1
+    assert router.stats.routed == [0, 1]
+
+
+def test_router_returns_none_when_all_saturated():
+    engines = [FakeEngine(admit=False), FakeEngine(admit=False)]
+    router = Router(engines, "least_loaded")
+    assert router.route(_req()) is None
+    assert router.stats.total_routed == 0          # nothing counted
+
+
+def test_router_least_loaded_monotone():
+    """Each placement goes to the currently lightest replica, so loads
+    level out instead of piling up."""
+    engines = [FakeEngine(inflight=9), FakeEngine(inflight=0),
+               FakeEngine(inflight=5)]
+    router = Router(engines, "least_loaded")
+    for i in range(8):
+        idx = router.route(_req(n=4, uid=i))
+        assert engines[idx].inflight == min(e.inflight for e in engines)
+        engines[idx].submit(_req(n=4, uid=100 + i))
+    spread = max(e.inflight for e in engines) - min(e.inflight for e in engines)
+    assert spread <= 4                              # leveled within one request
+
+
+def test_router_least_loaded_tiebreak_free_blocks():
+    engines = [FakeEngine(inflight=4, free_blocks=1),
+               FakeEngine(inflight=4, free_blocks=7)]
+    router = Router(engines, "least_loaded")
+    assert router.rank(_req()) == [1, 0]
+
+
+def test_router_prefix_affinity_prefers_hit_then_load():
+    engines = [FakeEngine(inflight=0, prefix_hit=0),
+               FakeEngine(inflight=99, prefix_hit=16),
+               FakeEngine(inflight=1, prefix_hit=16)]
+    router = Router(engines, "prefix_affinity")
+    # best hit wins; among equal hits the lighter replica goes first
+    assert router.rank(_req()) == [2, 1, 0]
+    assert router.route(_req(n=4)) == 2
+    assert router.stats.prefix_hit_tokens == 16
+    assert router.stats.probed_tokens == 4
+
+
+# ----------------------------------------------------------- probe_prefix
+def dataclass_snapshot(pool):
+    return tuple(vars(pool.stats).items())
+
+
+def test_probe_prefix_is_side_effect_free():
+    pool = BlockPool(n_blocks=16, block_size=4)
+    mgr = PagedCacheManager(pool, n_slots=2, max_blocks=4)
+    prompt = np.arange(1, 11, dtype=np.int32)      # 10 tokens = 2.5 blocks
+    res = mgr.try_admit(0, prompt)
+    assert res is not None
+
+    before = (copy.deepcopy(pool._ref), copy.deepcopy(pool._key_to_block),
+              pool.free_count, dataclass_snapshot(pool))
+    hit = mgr.probe_prefix(prompt)
+    assert hit == 10                                # whole prompt resident
+    assert mgr.probe_prefix(prompt[:8]) == 8        # full-block prefix
+    assert mgr.probe_prefix(np.arange(50, 60, dtype=np.int32)) == 0
+    # a probe must not incref, allocate, register, or bump stats
+    after = (pool._ref, pool._key_to_block, pool.free_count,
+             dataclass_snapshot(pool))
+    assert before == after
+
+
+def test_admit_shortfall_matches_try_admit():
+    pool = BlockPool(n_blocks=16, block_size=4)
+    mgr = PagedCacheManager(pool, n_slots=2, max_blocks=4)
+    first = np.arange(1, 9, dtype=np.int32)        # 2 blocks exactly
+    # exact multiple: needs 2 blocks + 1 decode headroom
+    assert mgr.admit_shortfall(first) == 3
+    mgr.try_admit(0, first)
+    # same prompt again: prefix fully resident, only headroom is fresh
+    assert mgr.admit_shortfall(first) == 1
+    # shares one block, needs one fresh + no headroom (partial tail)
+    second = np.concatenate([first[:4], np.arange(90, 93, dtype=np.int32)])
+    assert mgr.admit_shortfall(second) == 1
+
+
+# ------------------------------------------------------ cluster equivalence
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(cache_kind="paged", block_size=8, schedule="hybrid", prefill_chunk=8),
+], ids=["dense/decode-only", "paged/hybrid"])
+def test_cluster_matches_single_engine(model_params, kw):
+    """Routing moves requests, never changes them: every request's greedy
+    output in a 2-replica cluster is token-identical to a single engine
+    serving the same prompts."""
+    model, params = model_params
+    single = _serve_engine(model, params, PROMPTS, **kw)
+    for route in ROUTE_POLICIES:
+        reqs, stats, cl = _serve_cluster(model, params, PROMPTS, route=route, **kw)
+        for s, c in zip(single, reqs):
+            assert c.done
+            assert s.out_tokens == c.out_tokens, (route, s.uid, c.out_tokens)
+        # router invariants on a live cluster
+        assert stats.generated == sum(len(r.out_tokens) for r in reqs)
+        assert sum(s.routed for s in stats.replicas) == len(PROMPTS)
+        assert sorted(cl.placement) == [r.uid for r in reqs]
+        assert not cl.queue
+
+
+def test_cluster_rejects_oversized_prompt_and_duplicate_uid(model_params):
+    model, params = model_params
+    cl = Cluster(model, params, 2, n_slots=2, max_seq=32)
+    with pytest.raises(ValueError):
+        cl.submit(Request(uid=0, prompt=np.arange(40, dtype=np.int32),
+                          max_new_tokens=2))
+    cl.submit(_req(uid=7))
+    with pytest.raises(ValueError):
+        cl.submit(_req(uid=7))
+
+
+def test_cluster_prefix_affinity_beats_round_robin(model_params):
+    """Interleaved shared-prefix groups: affinity routing must land group
+    members where their blocks live, round-robin must not."""
+    model, params = model_params
+    rng = np.random.default_rng(2)
+    prefixes = [rng.integers(1, model.cfg.vocab, size=16).astype(np.int32)
+                for _ in range(3)]
+    prompts = [np.concatenate([prefixes[g],
+                               rng.integers(1, model.cfg.vocab, size=3
+                                            ).astype(np.int32)])
+               for _ in range(3) for g in range(3)]
+    # enough slots that group members co-reside: placement, not capacity,
+    # decides whether a member lands on its prefix blocks
+    kw = dict(cache_kind="paged", block_size=8, schedule="hybrid",
+              prefill_chunk=8, n_slots=4, n_new=10)
+    _, rr, _ = _serve_cluster(model, params, prompts, route="round_robin", **kw)
+    _, aff, _ = _serve_cluster(model, params, prompts, route="prefix_affinity",
+                               **kw)
+    assert aff.prefix_hit_rate > rr.prefix_hit_rate
+
+
+# --------------------------------------------- engine satellites (cluster PR)
+def test_boundary_packing_keeps_budget_full(model_params):
+    """Sarathi-SC: the final partial chunk of one prompt and the head of
+    the next ride the same iteration; outputs stay greedy-exact."""
+    model, params = model_params
+    ref = _serve_engine(model, params, PROMPTS)
+    for async_mode in (False, True):
+        eng = Engine(model, params, n_slots=2, max_seq=32,
+                     schedule="hybrid", prefill_chunk=8,
+                     async_mode=async_mode)
+        reqs = _requests(PROMPTS)
+        for r in reqs:
+            eng.submit(r)
+        stats = eng.run()
+        assert stats.boundary_packs >= 1, "no boundary pack happened"
+        for a, b in zip(ref, reqs):
+            assert a.out_tokens == b.out_tokens, (async_mode, a.uid)
+
+
+def test_scheduler_pack_boundary_respects_budget():
+    from repro.serving.scheduler import Scheduler
+    sched = Scheduler(n_slots=2, max_seq=64, mode="hybrid", prefill_chunk=16)
+    sched.begin("req", slot=1, start=0, total=40)
+    w = sched.pack_boundary(5)
+    assert w is not None and w.n_valid == 5 and w.bucket == 8
+    sched.advance(w)
+    assert sched.pack_boundary(0) is None
+    # paged: a sub-block leftover cannot start a non-final chunk
+    sched2 = Scheduler(n_slots=2, max_seq=64, mode="hybrid",
+                       prefill_chunk=16, block_size=8)
+    sched2.begin("req", slot=0, start=0, total=40)
+    assert sched2.pack_boundary(5) is None
+    assert sched2.pack_boundary(9).n_valid == 8    # rounds down to the block
+
+
+def test_preemption_drains_only_the_victim(model_params):
+    """Async preemption observes just the victim's in-flight tokens
+    (victim_drains counts it); greedy outputs stay exact and the pool
+    empties cleanly."""
+    model, params = model_params
+    prompts = [np.arange(1, 10, dtype=np.int32),
+               np.arange(3, 8, dtype=np.int32)]
+    kw = dict(cache_kind="paged", block_size=4, n_blocks=9,
+              schedule="hybrid", prefill_chunk=8)
+    sync = _serve_engine(model, params, prompts, n_new=10,
+                         async_mode=False, **kw)
+    eng = Engine(model, params, n_slots=2, max_seq=32, async_mode=True, **kw)
+    reqs = _requests(prompts, n_new=10)
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run()
+    assert stats.preemptions >= 1
+    assert stats.victim_drains >= 1
+    for s, a in zip(sync, reqs):
+        assert s.out_tokens == a.out_tokens, (s.uid, s.out_tokens, a.out_tokens)
+    assert eng.pool.in_use == 0

@@ -85,8 +85,9 @@ def test_async_matches_sync_greedy(model_params, kw):
 
 
 def test_async_matches_sync_paged_preemption(model_params):
-    """A pool sized to force preemption: the async engine must drain its
-    pipeline before evicting so the refolded prompt is exact."""
+    """A pool sized to force preemption: the async engine must observe
+    the victim's in-flight tokens before evicting so the refolded prompt
+    is exact (tests/test_cluster.py checks the drain stays victim-only)."""
     model, params = model_params
     prompts = [np.arange(1, 10, dtype=np.int32),
                np.arange(3, 8, dtype=np.int32)]

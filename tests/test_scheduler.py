@@ -156,6 +156,9 @@ def test_hybrid_compiles_within_bucket_set():
     n_buckets = len(eng.sched.buckets)
     assert eng._fused._cache_size() <= n_buckets
     assert eng._solo._cache_size() <= n_buckets
+    # boundary-pack programs: one shape per (bucket_A, bucket_B) combo
+    assert eng._fused2._cache_size() <= n_buckets**2
+    assert eng._solo2._cache_size() <= n_buckets**2
     # decode: one fixed shape regardless of the length mix (the async
     # engine dispatches the sampled variant, never the logits step)
     decode_jit = eng._decode_sampled if eng.async_mode else eng._decode
