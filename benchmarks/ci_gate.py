@@ -25,6 +25,12 @@ them against the committed ``benchmarks/baseline.json``:
   trajectory but not gated — smoke-window interpret-mode timings swing
   severalfold run to run.
 
+``ttft_p99_steps`` / ``per_token_p99_steps`` (exact percentiles over
+per-request samples, via the telemetry metrics registry) ride along in
+``BENCH_ci.json`` un-gated for now, and every run also appends a
+``BENCH_<n>.json`` trajectory snapshot at the repo root
+(``benchmarks.run.write_trajectory``).
+
 A metric regressing past its band — or any sub-bench raising — fails the
 job.  ``--update`` rewrites the baseline from the current run instead of
 gating (commit the result).
@@ -111,6 +117,8 @@ def main(argv: list[str] | None = None) -> int:
     report = {"metrics": metrics, "bench_failures": failures}
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
     print(f"\nwrote {args.out}: {json.dumps(metrics)}")
+    if all_metrics:
+        print(f"trajectory snapshot: {bench_run.write_trajectory(all_metrics)}")
 
     if args.update:
         Path(args.baseline).write_text(json.dumps(metrics, indent=2) + "\n")

@@ -20,8 +20,11 @@ produced (``benchmarks/ci_gate.py`` consumes them).
 from __future__ import annotations
 
 import inspect
+import json
+import re
 import sys
 import traceback
+from pathlib import Path
 
 from benchmarks import (
     cluster_bench,
@@ -75,6 +78,22 @@ def run_benches(names: list[str], smoke: bool = False) -> tuple[dict, list[str]]
     return metrics, failures
 
 
+def write_trajectory(metrics: dict, root: str | Path | None = None) -> Path:
+    """Persist one ``BENCH_<n>.json`` perf-trajectory snapshot at the
+    repo root (next free integer after the existing snapshots), so the
+    repo accumulates a comparable run-over-run record.  ``metrics`` is
+    the ``{bench: metrics-dict}`` map :func:`run_benches` returns."""
+    root = Path(root) if root is not None else Path(__file__).resolve().parents[1]
+    taken = [
+        int(m.group(1))
+        for p in root.glob("BENCH_*.json")
+        if (m := re.fullmatch(r"BENCH_(\d+)\.json", p.name))
+    ]
+    path = root / f"BENCH_{max(taken, default=0) + 1}.json"
+    path.write_text(json.dumps(metrics, indent=2, sort_keys=True) + "\n")
+    return path
+
+
 def main(argv: list[str] | None = None) -> dict:
     """Run the named benches (all by default); return {name: metrics}.
 
@@ -85,6 +104,8 @@ def main(argv: list[str] | None = None) -> dict:
     smoke = "--smoke" in argv
     names = [a for a in argv if not a.startswith("--")] or list(ALL)
     metrics, failures = run_benches(names, smoke)
+    if metrics:
+        print(f"\ntrajectory snapshot: {write_trajectory(metrics)}")
     if failures:
         print(f"\nFAILED benches: {', '.join(failures)}", file=sys.stderr)
         raise SystemExit(1)

@@ -176,11 +176,18 @@ def main(print_fn=print, smoke: bool = False) -> dict:
              f"throughput gain: "
              f"{h_stats.tokens_per_step / d_stats.tokens_per_step:.2f}x (in steps)")
 
+    print_fn(f"# hybrid TTFT percentiles (steps): "
+             f"p50 {h_stats.ttft_p50_steps:.0f} p99 {h_stats.ttft_p99_steps:.0f}")
+
     print_fn("\n# sync vs async engine: decode-heavy workload, 8 slots")
     speedup = async_compare(model, params, print_fn, smoke)
     return {
         "tokens_per_step": h_stats.tokens_per_step,
         "mean_ttft_steps": h_stats.mean_ttft_steps,
+        # exact percentiles over per-request samples; recorded in
+        # BENCH_ci.json for the trajectory, not (yet) gated
+        "ttft_p99_steps": h_stats.ttft_p99_steps,
+        "per_token_p99_steps": h_stats.per_token_percentile(99),
         "async_speedup": speedup,
     }
 

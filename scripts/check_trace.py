@@ -1,0 +1,71 @@
+"""CI trace smoke checker: assert a serve run produced a usable trace.
+
+  PYTHONPATH=src python scripts/check_trace.py cluster_trace.json --replicas 2
+
+Parses the Perfetto/Chrome-trace JSON a ``--trace`` serve run wrote,
+runs it through :func:`repro.serving.telemetry.validate_trace`, and
+asserts every expected replica contributed at least one **complete**
+request span (a closed ``decode`` span whose request also has a
+``finish`` marker) — the end-to-end guarantee the CI traced-serve smoke
+gates on.  Exits nonzero with the problems printed otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+from repro.serving.telemetry import validate_trace
+
+
+def check(obj: dict, n_replicas: int) -> list[str]:
+    """Return problem strings (empty = the trace passes the smoke bar)."""
+    problems = validate_trace(obj)
+    if problems:
+        return problems
+    events = obj["traceEvents"]
+    decodes: dict[int, set[int]] = defaultdict(set)   # replica -> uids
+    finishes: dict[int, set[int]] = defaultdict(set)
+    for e in events:
+        args = e.get("args", {})
+        if e["ph"] == "X" and e["name"].startswith("decode") and e["dur"] >= 0:
+            decodes[e["pid"]].add(args.get("uid", -1))
+        if e["ph"] == "i" and e["name"] == "finish":
+            finishes[e["pid"]].add(args.get("uid", -1))
+    for r in range(n_replicas):
+        complete = decodes.get(r, set()) & finishes.get(r, set())
+        if not complete:
+            problems.append(
+                f"replica {r}: no complete request span "
+                f"(decoded uids {sorted(decodes.get(r, set()))}, "
+                f"finished uids {sorted(finishes.get(r, set()))})"
+            )
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome-trace JSON written by --trace")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica count that must each show a complete span")
+    args = ap.parse_args(argv)
+    try:
+        obj = json.loads(open(args.trace).read())
+    except (OSError, ValueError) as e:
+        print(f"cannot read trace {args.trace}: {e}", file=sys.stderr)
+        return 1
+    problems = check(obj, args.replicas)
+    if problems:
+        print(f"trace check FAILED for {args.trace}:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    n_events = len(obj["traceEvents"])
+    print(f"trace OK: {args.trace} ({n_events} events, "
+          f"complete spans on {args.replicas} replica(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

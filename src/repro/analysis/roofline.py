@@ -84,6 +84,53 @@ def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
     return flops
 
 
+def dispatch_flops_bytes(
+    cfg: ModelConfig,
+    n_decode: int,
+    kv_tokens: int,
+    prefill_tokens: int = 0,
+    prefill_ctx_tokens: int = 0,
+    n_params: float | None = None,
+) -> tuple[float, float]:
+    """Analytic FLOPs and HBM bytes for ONE fused serving dispatch.
+
+    This is the live-timeline counterpart of :func:`model_flops` /
+    :func:`model_bytes`: the serving engine's step timeline
+    (``serving/telemetry/timeline.py``) calls it per dispatch so each
+    step's operational intensity ties back to the same Fig-1 roofline
+    accounting the offline analysis uses.
+
+    * ``n_decode`` — decode lanes in the batch (one token each);
+    * ``kv_tokens`` — total KV positions the decode lanes attend over
+      (sum of per-lane context lengths);
+    * ``prefill_tokens`` — real tokens in the fused prefill chunk(s);
+    * ``prefill_ctx_tokens`` — total context positions the chunk's
+      queries attend over (``sum_i (start + i)`` for a causal chunk at
+      offset ``start``).
+
+    FLOPs: every token (decode or prefill) streams the active linear
+    params once (``2 * N_active`` per token), plus the attention term
+    ``2 * 2 * L * H * Dh`` per attended position (QK^T and PV).  Bytes:
+    the weight stream is read **once per dispatch** — that shared read
+    is exactly the paper's co-processing win, prefill GEMMs riding the
+    decode weight stream — plus per-position KV reads, per-token KV
+    writes, and one activation write+read per layer.
+    """
+    n_active = _active_params(cfg)
+    n_params = n_active if n_params is None else n_params
+    Dh = cfg.resolved_head_dim()
+    tokens = n_decode + prefill_tokens
+    attended = kv_tokens + prefill_ctx_tokens
+    flops = 2.0 * n_active * tokens
+    flops += 2.0 * 2.0 * cfg.n_layers * cfg.n_heads * Dh * attended
+    kv_tok = kv_bytes_per_seq(cfg, 1)
+    bytes_ = 2.0 * n_params                      # bf16 weight stream, once
+    bytes_ += kv_tok * attended                  # KV reads (decode + chunk)
+    bytes_ += kv_tok * tokens                    # KV writes
+    bytes_ += 2.0 * tokens * cfg.d_model * cfg.n_layers * 2.0
+    return flops, bytes_
+
+
 def model_bytes(
     cfg: ModelConfig,
     shape: ShapeConfig,

@@ -47,6 +47,13 @@ from repro.models.registry import build_model
 from repro.serving.cluster import ROUTE_POLICIES, Cluster
 from repro.serving.engine import Engine, Request
 from repro.serving.sampler import SamplerConfig
+from repro.serving.telemetry import (
+    Tracer,
+    cluster_registry,
+    engine_registry,
+    write_metrics,
+    write_trace,
+)
 
 
 def main():
@@ -91,6 +98,11 @@ def main():
                     help="engine replicas behind the shared global queue")
     ap.add_argument("--route", choices=ROUTE_POLICIES, default="round_robin",
                     help="replica routing policy (with --replicas > 1)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record request spans + step timeline and write a "
+                         "Perfetto/Chrome-trace JSON here")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.json",
+                    help="write the metrics-registry snapshot as flat JSON")
     args = ap.parse_args()
 
     cfg = reduce_config(args.arch) if args.reduced else get_config(args.arch)
@@ -126,11 +138,14 @@ def main():
         token_budget=args.token_budget,
         async_mode=args.async_mode == "on",
     )
+    tracer = Tracer(wall=True) if args.trace else None
     cluster = (
-        Cluster(model, params, args.replicas, route=args.route, **engine_kw)
+        Cluster(model, params, args.replicas, route=args.route, tracer=tracer,
+                **engine_kw)
         if args.replicas > 1 else None
     )
-    eng = cluster.engines[0] if cluster else Engine(model, params, **engine_kw)
+    eng = (cluster.engines[0] if cluster
+           else Engine(model, params, tracer=tracer, **engine_kw))
     serv = cluster if cluster else eng
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
@@ -141,27 +156,53 @@ def main():
     t0 = time.time()
     stats = serv.run()
     dt = time.time() - t0
+    # all reported numbers flow through the metrics registry — the CLI
+    # printout and the --metrics-out dump read the same snapshot
+    registry = (
+        cluster_registry(stats) if cluster
+        else engine_registry(
+            stats, eng.pool.stats if args.cache == "paged" else None
+        )
+    )
+    snap = registry.snapshot()
     print(f"mode: async={args.async_mode} sample={mode} "
           f"(T={sampler.temperature} top_k={sampler.top_k})")
     if cluster:
         print(f"cluster: replicas={args.replicas} route={args.route}")
         print(f"requests={args.requests} {stats.summary()}")
+        print(f"latency: TTFT mean {snap['mean_ttft_steps']:.1f} "
+              f"p50 {snap['ttft_steps_p50']:.0f} "
+              f"p99 {snap['ttft_steps_p99']:.0f} engine steps, "
+              f"per-token p99 {snap['per_token_steps_p99']:.2f} steps")
         print(f"wall {dt:.2f}s -> {stats.generated/dt:.1f} tok/s")
         if args.cache == "paged":
             for i, e in enumerate(cluster.engines):
                 print(f"pool[r{i}]: {e.pool.stats}")
-        return
-    print(f"requests={args.requests} prefills={stats.prefills} "
-          f"prefill_chunks={stats.prefill_chunks} "
-          f"boundary_packs={stats.boundary_packs} "
-          f"decode_steps={stats.decode_steps} engine_steps={stats.engine_steps} "
-          f"generated={stats.generated} peak_active={stats.peak_active}")
-    print(f"latency: mean TTFT {stats.mean_ttft_steps:.1f} engine steps, "
-          f"{stats.tokens_per_step:.2f} tokens/step")
-    print(f"wall {dt:.2f}s -> {stats.generated/dt:.1f} tok/s "
-          f"(batch efficiency {stats.generated/max(stats.decode_steps*args.slots,1):.0%})")
-    if args.cache == "paged":
-        print(f"pool: {eng.pool.stats} kv_bytes={eng.kv_bytes()}")
+    else:
+        print(f"requests={args.requests} prefills={stats.prefills} "
+              f"prefill_chunks={stats.prefill_chunks} "
+              f"boundary_packs={stats.boundary_packs} "
+              f"decode_steps={stats.decode_steps} "
+              f"engine_steps={stats.engine_steps} "
+              f"generated={stats.generated} peak_active={stats.peak_active}")
+        print(f"latency: TTFT mean {snap['mean_ttft_steps']:.1f} "
+              f"p50 {snap['ttft_steps_p50']:.0f} "
+              f"p99 {snap['ttft_steps_p99']:.0f} engine steps, "
+              f"{snap['tokens_per_step']:.2f} tokens/step")
+        print(f"wall {dt:.2f}s -> {stats.generated/dt:.1f} tok/s "
+              f"(batch efficiency "
+              f"{stats.generated/max(stats.decode_steps*args.slots,1):.0%})")
+        if args.cache == "paged":
+            print(f"pool: {eng.pool.stats} kv_bytes={eng.kv_bytes()}")
+    if args.trace:
+        path = write_trace(tracer, args.trace)
+        print(f"trace: {path} (open at ui.perfetto.dev)")
+    if args.metrics_out:
+        path = write_metrics(
+            registry, args.metrics_out,
+            extra={"wall_s": dt, "requests": float(args.requests)},
+        )
+        print(f"metrics: {path}")
 
 
 if __name__ == "__main__":

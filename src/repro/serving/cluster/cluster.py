@@ -29,6 +29,7 @@ from collections import deque
 from repro.serving.cluster.router import Router
 from repro.serving.cluster.stats import ClusterStats, ReplicaStats
 from repro.serving.engine import Engine, Request
+from repro.serving.telemetry import NULL_TRACER
 
 Pytree = object
 
@@ -40,12 +41,17 @@ class Cluster:
         params: Pytree,
         n_replicas: int,
         route: str = "round_robin",
+        tracer=None,
         **engine_kw,
     ):
         if n_replicas < 1:
             raise ValueError(f"need >= 1 replica, got {n_replicas}")
-        self.engines = [Engine(model, params, **engine_kw) for _ in range(n_replicas)]
-        self.router = Router(self.engines, route)
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.engines = [
+            Engine(model, params, tracer=self.tracer, replica=i, **engine_kw)
+            for i in range(n_replicas)
+        ]
+        self.router = Router(self.engines, route, tracer=self.tracer)
         self.max_seq = self.engines[0].max_seq
         self.queue: deque[Request] = deque()
         self.rounds = 0
@@ -90,6 +96,8 @@ class Cluster:
     def step(self) -> bool:
         """One cluster round: admit from the global queue, then step
         every replica once.  Returns whether any work remains."""
+        if self.tracer.enabled:
+            self.tracer.round = self.rounds
         self._dispatch_queue()
         self.rounds += 1
         busy = False

@@ -30,6 +30,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.serving.telemetry import NULL_TRACER
+
 ROUTE_POLICIES = ("round_robin", "least_loaded", "prefix_affinity")
 
 
@@ -50,7 +52,7 @@ class RouterStats:
 
 
 class Router:
-    def __init__(self, engines, policy: str = "round_robin"):
+    def __init__(self, engines, policy: str = "round_robin", tracer=None):
         if policy not in ROUTE_POLICIES:
             raise ValueError(
                 f"unknown route policy {policy!r} (known: {', '.join(ROUTE_POLICIES)})"
@@ -59,6 +61,7 @@ class Router:
             raise ValueError("router needs at least one replica")
         self.engines = list(engines)
         self.policy = policy
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self._rr = 0
         self.stats = RouterStats(routed=[0] * len(self.engines))
 
@@ -106,11 +109,12 @@ class Router:
             if pos > 0:
                 self.stats.spills += 1
             self.stats.routed[idx] += 1
-            self.stats.prefix_hit_tokens += (
-                hits[idx] if hits is not None
-                else self.engines[idx].probe_prefix(req.prompt)
-            )
+            hit = (hits[idx] if hits is not None
+                   else self.engines[idx].probe_prefix(req.prompt))
+            self.stats.prefix_hit_tokens += hit
             self.stats.probed_tokens += len(req.prompt)
+            self.tracer.on_route(req.uid, idx, self.policy, pos, hit,
+                                 len(req.prompt))
             if self.policy == "round_robin":
                 self._rr = (idx + 1) % len(self.engines)
             return idx

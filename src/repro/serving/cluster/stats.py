@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.serving.engine import EngineStats
+from repro.serving.telemetry import percentile
 
 
 @dataclasses.dataclass
@@ -34,6 +35,11 @@ class ReplicaStats:
     def utilization(self, rounds: int) -> float:
         """Generated tokens per slot-round offered to this replica."""
         return self.engine.generated / max(rounds * self.n_slots, 1)
+
+    @property
+    def routed_share(self) -> float:
+        """Routed requests per token generated (0.0 before any output)."""
+        return self.routed / max(self.engine.generated, 1)
 
 
 @dataclasses.dataclass
@@ -79,8 +85,30 @@ class ClusterStats:
     def load_imbalance(self) -> float:
         """max/mean of per-replica generated tokens (1.0 = level)."""
         gen = [r.engine.generated for r in self.replicas]
-        mean = sum(gen) / max(len(gen), 1)
+        if not gen:
+            return 1.0
+        mean = sum(gen) / len(gen)
         return max(gen) / mean if mean > 0 else 1.0
+
+    def ttft_percentile(self, p: float) -> float:
+        """Exact TTFT percentile over all replicas' raw samples."""
+        return percentile(
+            [s for r in self.replicas for s in r.engine.ttft_samples], p
+        )
+
+    @property
+    def ttft_p50_steps(self) -> float:
+        return self.ttft_percentile(50)
+
+    @property
+    def ttft_p99_steps(self) -> float:
+        return self.ttft_percentile(99)
+
+    def per_token_percentile(self, p: float) -> float:
+        """Exact decode per-token-latency percentile across replicas."""
+        return percentile(
+            [s for r in self.replicas for s in r.engine.per_token_samples], p
+        )
 
     def summary(self) -> str:
         per = " ".join(

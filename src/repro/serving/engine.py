@@ -85,6 +85,12 @@ from repro.serving.paged import BlockPool, PagedCacheManager
 from repro.serving.paged import device as paged_dev
 from repro.serving.sampler import SamplerConfig, sample, sample_on_device
 from repro.serving.scheduler import PrefillChunk, Scheduler
+from repro.serving.telemetry import (
+    NULL_TRACER,
+    DispatchCostModel,
+    StepRecord,
+    percentile,
+)
 
 Pytree = Any
 
@@ -120,6 +126,11 @@ class EngineStats:
     victim_drains: int = 0          # async: partial (victim-only) drains
     ttft_steps_sum: int = 0
     ttft_count: int = 0
+    # raw per-request samples (ttft: submit->first-token in engine steps;
+    # per_token: decode steps per generated token after the first) so
+    # percentiles are exact, not reconstructed from sums
+    ttft_samples: list[int] = dataclasses.field(default_factory=list)
+    per_token_samples: list[float] = dataclasses.field(default_factory=list)
 
     @property
     def mean_ttft_steps(self) -> float:
@@ -129,6 +140,21 @@ class EngineStats:
     @property
     def tokens_per_step(self) -> float:
         return self.generated / max(self.engine_steps, 1)
+
+    def ttft_percentile(self, p: float) -> float:
+        """Exact nearest-rank TTFT percentile over per-request samples."""
+        return percentile(self.ttft_samples, p)
+
+    @property
+    def ttft_p50_steps(self) -> float:
+        return self.ttft_percentile(50)
+
+    @property
+    def ttft_p99_steps(self) -> float:
+        return self.ttft_percentile(99)
+
+    def per_token_percentile(self, p: float) -> float:
+        return percentile(self.per_token_samples, p)
 
 
 @dataclasses.dataclass
@@ -186,6 +212,8 @@ class Engine:
         prefill_chunk: int = 32,
         token_budget: int | None = None,
         async_mode: bool = True,
+        tracer=None,
+        replica: int = 0,
     ):
         self.model = model
         self.params = params
@@ -198,6 +226,15 @@ class Engine:
         self.slots: list[Request | None] = [None] * n_slots
         self.stats = EngineStats()
         self.rng = rng if rng is not None else jax.random.key(0)
+        # telemetry: NULL_TRACER hooks are no-ops, and `enabled` gates the
+        # per-dispatch StepRecord construction so a disabled run does no
+        # extra host work at all; everything records at dispatch/observe
+        # boundaries — never inside jit-traced code
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.replica = replica
+        self._cost_model = (
+            DispatchCostModel(model.cfg) if self.tracer.enabled else None
+        )
 
         self._prefill = jax.jit(model.prefill)
         if cache_kind == "paged":
@@ -449,6 +486,7 @@ class Engine:
             )
         req.submit_step = self.stats.engine_steps
         self.sched.submit(req)
+        self.tracer.on_submit(self.replica, req, req.submit_step)
 
     # ------------------------------------------------- cluster router hooks
     def load(self) -> EngineLoad:
@@ -588,9 +626,7 @@ class Engine:
                 or len(req.out_tokens) >= req.max_new_tokens
                 or length >= self.max_seq - 1
             ):
-                req.done = True
-                req.finish_step = rec.step
-                self._release_slot(i, req)
+                self._finish(i, req, rec.step)
 
     def _drain(self) -> None:
         """Observe every in-flight step (pipeline empties; ``out_tokens``
@@ -642,10 +678,23 @@ class Engine:
                     or len(req.out_tokens) >= req.max_new_tokens
                     or length >= self.max_seq - 1
                 ):
-                    req.done = True
-                    req.finish_step = rec.step
-                    self._release_slot(slot, req)
+                    self._finish(slot, req, rec.step)
         assert req.in_flight == 0, "victim drain left tokens in flight"
+
+    def _finish(self, slot: int, req: Request, step: int) -> None:
+        """Retire a completed request: stats samples, trace, slot release.
+        ``step`` is the engine-step clock value the finishing token was
+        *dispatched* at (the async observe paths pass the pending
+        record's stamp, keeping the clock identical to sync mode)."""
+        req.done = True
+        req.finish_step = step
+        n_decode_tokens = len(req.out_tokens) - 1
+        if n_decode_tokens > 0 and req.first_token_step >= 0:
+            self.stats.per_token_samples.append(
+                (req.finish_step - req.first_token_step) / n_decode_tokens
+            )
+        self.tracer.on_finish(self.replica, req, step, slot)
+        self._release_slot(slot, req)
 
     def _release_slot(self, slot: int, req: Request) -> None:
         if self.slots[slot] is not req:
@@ -672,9 +721,18 @@ class Engine:
             if not len(self.sched):
                 break
             req = self.sched.pop()
+            step0 = self.stats.engine_steps
             self.stats.engine_steps += self._prefill_cost(len(req.prompt))
             if req.admit_step < 0:
                 req.admit_step = self.stats.engine_steps
+            self.tracer.on_admit(self.replica, req, step0, slot,
+                                 n_tokens=len(req.prompt))
+            self.tracer.on_chunk(self.replica, req, slot, step0,
+                                 self.stats.engine_steps, 0,
+                                 len(req.prompt), None, True)
+            if self.tracer.enabled:
+                self._trace_prefill_dispatch(len(req.prompt),
+                                             self.stats.engine_steps - step0)
             prompt = jnp.asarray(req.prompt, jnp.int32)[None]
             sub_cache = self.model.init_cache(1, self.max_seq)
             logits, sub_cache = self._prefill(self.params, prompt, sub_cache)
@@ -700,9 +758,19 @@ class Engine:
             if res is None:
                 break                       # out of blocks: wait/FCFS
             self.sched.pop()
+            step0 = self.stats.engine_steps
             self.stats.engine_steps += self._prefill_cost(len(full))
             if req.admit_step < 0:
                 req.admit_step = self.stats.engine_steps
+            self.tracer.on_admit(self.replica, req, step0, slot,
+                                 n_tokens=len(full),
+                                 refold=bool(req.out_tokens))
+            self.tracer.on_chunk(self.replica, req, slot, step0,
+                                 self.stats.engine_steps, 0, len(full),
+                                 None, True)
+            if self.tracer.enabled:
+                self._trace_prefill_dispatch(len(full),
+                                             self.stats.engine_steps - step0)
             blocks, n_cached = res
             pad = -(-len(full) // self.block_size) * self.block_size
             sub_cache = self.model.init_cache(1, pad)
@@ -733,16 +801,21 @@ class Engine:
             self._first_pending.append((req, tok))
         else:
             req.out_tokens.append(int(sample(logits, self._next_rng(), self.sampler)[0]))
-        self._record_first_token(req)
+        self._record_first_token(req, slot)
 
-    def _record_first_token(self, req: Request) -> None:
+    def _record_first_token(self, req: Request, slot: int) -> None:
         """Shared prefill-completion accounting (sync and async paths)."""
-        if req.first_token_step < 0:
+        first = req.first_token_step < 0
+        if first:
             req.first_token_step = self.stats.engine_steps
-            self.stats.ttft_steps_sum += req.first_token_step - req.submit_step
+            ttft = req.first_token_step - req.submit_step
+            self.stats.ttft_steps_sum += ttft
             self.stats.ttft_count += 1
+            self.stats.ttft_samples.append(ttft)
         self.stats.prefills += 1
         self.stats.generated += 1
+        self.tracer.on_first_token(self.replica, req, self.stats.engine_steps,
+                                   slot, first=first)
 
     # --------------------------------------------- admission (chunked/hybrid)
     def _begin_prefill(self, req: Request, slot: int) -> tuple[int, int]:
@@ -770,6 +843,10 @@ class Engine:
         ``advance=False`` when the scheduler was already advanced at
         boundary-packing time (the next prompt had to begin before the
         fused dispatch was built)."""
+        self.tracer.on_chunk(self.replica, work.req, work.slot,
+                             self.stats.engine_steps - 1,
+                             self.stats.engine_steps, work.start,
+                             work.n_valid, work.bucket, work.last)
         self._flush_chunk_blocks(work)
         if advance:
             self.sched.advance(work)
@@ -793,6 +870,10 @@ class Engine:
         ``tok_state``; the host only does block/table bookkeeping (safe at
         dispatch time — device data-flow orders it after the step) and
         records that one more token is in flight."""
+        self.tracer.on_chunk(self.replica, work.req, work.slot,
+                             self.stats.engine_steps - 1,
+                             self.stats.engine_steps, work.start,
+                             work.n_valid, work.bucket, work.last)
         self._flush_chunk_blocks(work)
         if advance:
             self.sched.advance(work)
@@ -812,7 +893,7 @@ class Engine:
             self._eos_dev = paged_dev.set_stop_id(
                 self._eos_dev, work.slot, req.eos_id
             )
-            self._record_first_token(req)
+            self._record_first_token(req, work.slot)
 
     def _flush_chunk_blocks(self, work: PrefillChunk) -> None:
         if self.cache_kind != "paged":
@@ -848,6 +929,7 @@ class Engine:
         self.sched.push_front(req)
         self.stats.preemptions += 1
         self.pool.stats.preemptions += 1
+        self.tracer.on_preempt(self.replica, req, self.stats.engine_steps, slot)
 
     def _prepare_append(self, active: list[int]) -> list[int]:
         """Guarantee every active slot can write its next token: allocate
@@ -928,6 +1010,9 @@ class Engine:
         sched.begin(req, slot, start, total)
         if req.admit_step < 0:
             req.admit_step = self.stats.engine_steps
+        self.tracer.on_admit(self.replica, req, self.stats.engine_steps,
+                             slot, n_tokens=total,
+                             refold=bool(req.out_tokens))
         return sched.pack_boundary(budget)
 
     def _exec_solo_sync(self, work: PrefillChunk):
@@ -962,6 +1047,71 @@ class Engine:
             )
         return pre_tok
 
+    # ------------------------------------------------------------ telemetry
+    def _trace_prefill_dispatch(self, n_tokens: int, n_steps: int) -> None:
+        """StepRecord for a whole-prompt admission prefill (decode-only
+        schedule), charged at its ``ceil(L / prefill_chunk)``-step cost.
+        Called only when tracing is enabled."""
+        cm = self._cost_model
+        ctx = cm.chunk_ctx_tokens(0, n_tokens)
+        flops, bytes_ = cm.cost(0, 0, n_tokens, ctx)
+        self.tracer.on_step(StepRecord(
+            replica=self.replica, step=self.stats.engine_steps,
+            kind="prefill", decode_batch=0, prefill_tokens=n_tokens,
+            bucket=None, bucket2=None,
+            budget=n_steps * self.prefill_chunk,
+            fill=n_tokens / max(n_steps * self.prefill_chunk, 1),
+            kv_tokens=0,
+            pool_util=(self.pool.utilization
+                       if self.cache_kind == "paged" else None),
+            pipeline_depth=len(self._pending),
+            flops=flops, bytes=bytes_, oi=flops / max(bytes_, 1.0),
+            wall=self.tracer.wall(),
+        ))
+
+    def _trace_step(self, kind: str, active: list[int],
+                    work: PrefillChunk | None = None,
+                    work2: PrefillChunk | None = None) -> None:
+        """StepRecord for one decode/fused dispatch: composition (batch,
+        chunk, budget fill, pool pressure, pipeline depth) plus analytic
+        FLOPs/bytes so each dispatch lands on the paper's Fig-1 roofline.
+        Called only when tracing is enabled, from host bookkeeping the
+        engine already holds — no device reads."""
+        cm = self._cost_model
+        kv = 0
+        for i in active:
+            r = self.slots[i]
+            kv += len(r.prompt) + len(r.out_tokens) + r.in_flight
+        pre = ctx = 0
+        for w in (work, work2):
+            if w is not None:
+                pre += w.n_valid
+                ctx += cm.chunk_ctx_tokens(w.start, w.n_valid)
+        budget = (self.sched.token_budget if self.schedule == "hybrid"
+                  else len(self.slots))
+        flops, bytes_ = cm.cost(len(active), kv, pre, ctx)
+        self.tracer.on_step(StepRecord(
+            replica=self.replica, step=self.stats.engine_steps, kind=kind,
+            decode_batch=len(active), prefill_tokens=pre,
+            bucket=work.bucket if work is not None else None,
+            bucket2=work2.bucket if work2 is not None else None,
+            budget=budget, fill=(len(active) + pre) / max(budget, 1),
+            kv_tokens=kv,
+            pool_util=(self.pool.utilization
+                       if self.cache_kind == "paged" else None),
+            pipeline_depth=len(self._pending),
+            flops=flops, bytes=bytes_, oi=flops / max(bytes_, 1.0),
+            wall=self.tracer.wall(),
+        ))
+
+    @staticmethod
+    def _dispatch_kind(active, work, work2) -> str:
+        if work2 is not None:
+            return "fused2" if active else "solo2"
+        if work is not None:
+            return "fused" if active else "solo"
+        return "decode"
+
     # ----------------------------------------------------------------- step
     def _decode_tokens(self) -> jax.Array:
         tokens = np.zeros((len(self.slots),), np.int32)
@@ -984,9 +1134,7 @@ class Engine:
                 or len(req.out_tokens) >= req.max_new_tokens
                 or length >= self.max_seq - 1
             ):
-                req.done = True
-                req.finish_step = self.stats.engine_steps
-                self._release_slot(i, req)
+                self._finish(i, req, self.stats.engine_steps)
 
     def step(self) -> bool:
         """One engine iteration.  Returns whether any work remains."""
@@ -1012,6 +1160,8 @@ class Engine:
         )
         self.stats.decode_steps += 1
         self.stats.engine_steps += 1
+        if self.tracer.enabled:
+            self._trace_step("decode", active)
         self._finish_decode(active, logits)
         return any(s is not None for s in self.slots) or self.sched.has_work()
 
@@ -1032,6 +1182,8 @@ class Engine:
         self._tok_state = toks
         self.stats.decode_steps += 1
         self.stats.engine_steps += 1
+        if self.tracer.enabled:
+            self._trace_step("decode", active)
         reqs = {}
         for i in active:
             req = self.slots[i]
@@ -1053,6 +1205,10 @@ class Engine:
                 sched.begin(req, slot, start, total)
                 if req.admit_step < 0:
                     req.admit_step = self.stats.engine_steps + 1
+                self.tracer.on_admit(self.replica, req,
+                                     self.stats.engine_steps, slot,
+                                     n_tokens=total,
+                                     refold=bool(req.out_tokens))
 
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if self.cache_kind == "paged" and active:
@@ -1094,6 +1250,8 @@ class Engine:
         dec_logits = pre_logits = logits2 = None
         if work2 is not None:
             self.stats.boundary_packs += 1
+            self.tracer.on_boundary_pack(self.replica, work2.req,
+                                         self.stats.engine_steps, work2.slot)
             if active:
                 dec_logits, pre_logits, logits2, self.cache = self._fused2(
                     self.params, self.cache, self._decode_tokens(),
@@ -1127,6 +1285,9 @@ class Engine:
         else:
             pre_logits = self._exec_solo_sync(work)
 
+        if self.tracer.enabled:
+            self._trace_step(self._dispatch_kind(active, work, work2),
+                             active, work, work2)
         if active:
             self._finish_decode(active, dec_logits)
         if work is not None:
@@ -1148,6 +1309,10 @@ class Engine:
                 sched.begin(req, slot, start, total)
                 if req.admit_step < 0:
                     req.admit_step = self.stats.engine_steps + 1
+                self.tracer.on_admit(self.replica, req,
+                                     self.stats.engine_steps, slot,
+                                     n_tokens=total,
+                                     refold=bool(req.out_tokens))
 
         active = self._predicted_active()
         if self.cache_kind == "paged" and active:
@@ -1190,6 +1355,8 @@ class Engine:
         toks = eos = pre_tok = pre_tok2 = None
         if work2 is not None:
             self.stats.boundary_packs += 1
+            self.tracer.on_boundary_pack(self.replica, work2.req,
+                                         self.stats.engine_steps, work2.slot)
             if active:
                 (self._tok_state, toks, eos, pre_tok, pre_tok2,
                  self.cache) = self._fused2(
@@ -1227,6 +1394,9 @@ class Engine:
         else:
             pre_tok = self._exec_solo_async(work, rng)
 
+        if self.tracer.enabled:
+            self._trace_step(self._dispatch_kind(active, work, work2),
+                             active, work, work2)
         reqs = {}
         for i in active:
             req = self.slots[i]

@@ -1,0 +1,66 @@
+"""Serving telemetry: request-span tracing, step timelines, metrics.
+
+* :class:`Tracer` / :data:`NULL_TRACER` — one span tree per request on
+  the engine-step clock (``tracer.py``);
+* :class:`StepRecord` / :class:`DispatchCostModel` — per-dispatch
+  composition + analytic FLOPs/bytes/OI (``timeline.py``);
+* :class:`MetricsRegistry` + builders — the single reporting view over
+  engine/cluster stats with exact percentiles (``metrics.py``);
+* Perfetto/Chrome-trace and metrics JSON exporters (``export.py``).
+
+Telemetry is zero-cost when disabled (engines default to
+:data:`NULL_TRACER`) and records only at host-side dispatch/observe
+boundaries — never inside jit-traced code.
+"""
+from repro.serving.telemetry.export import (
+    build_request_trees,
+    to_chrome_trace,
+    validate_trace,
+    write_metrics,
+    write_trace,
+)
+from repro.serving.telemetry.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    cluster_registry,
+    engine_registry,
+    percentile,
+)
+from repro.serving.telemetry.timeline import DispatchCostModel, StepRecord
+from repro.serving.telemetry.tracer import (
+    NULL_TRACER,
+    TRACK_QUEUE,
+    TRACK_ROUTER,
+    TRACK_STEPS,
+    Event,
+    NullTracer,
+    Span,
+    Tracer,
+)
+
+__all__ = [
+    "NULL_TRACER",
+    "TRACK_QUEUE",
+    "TRACK_ROUTER",
+    "TRACK_STEPS",
+    "Counter",
+    "DispatchCostModel",
+    "Event",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NullTracer",
+    "Span",
+    "StepRecord",
+    "Tracer",
+    "build_request_trees",
+    "cluster_registry",
+    "engine_registry",
+    "percentile",
+    "to_chrome_trace",
+    "validate_trace",
+    "write_metrics",
+    "write_trace",
+]

@@ -1,0 +1,275 @@
+"""Request-span tracing on the engine-step clock.
+
+The paper's argument is an accounting argument — co-processing wins only
+if you can see where each step's time and bytes go — so the tracer
+records *everything the engine already knows at its host-side dispatch
+and observe boundaries* and nothing more: no timers inside jit-traced
+code, no device syncs, no extra transfers.  Every record is stamped on
+the deterministic ``EngineStats.engine_steps`` clock (the same clock TTFT
+and tokens/step are measured on), with optional wall-clock timestamps
+(``Tracer(wall=True)``) riding along as annotations.
+
+One request produces one span tree::
+
+    request (synthesized at export)
+    ├── queued          submit -> admitted          (re-opens on preemption)
+    ├── prefill_chunk   one per executed chunk      (whole prefill = 1 span)
+    ├── ...             (hybrid: xN, boundary-packed chunks included)
+    └── decode          first_token -> finish       (ends early on preempt)
+
+plus instant events: ``admitted``, ``refolded`` (re-admission after a
+preemption, generated tokens folded into the prefill), ``first_token``,
+``preempted``, ``boundary_packed``, ``finish``, and cluster-level
+``route`` events (policy, chosen replica, spill).
+
+Tracks: spans carry a ``(replica, track)`` address — ``track`` is the
+engine slot the work ran on, or one of the reserved tracks
+(:data:`TRACK_QUEUE` for pre-admission waits, :data:`TRACK_STEPS` for
+the per-dispatch timeline, :data:`TRACK_ROUTER` on the cluster row for
+routing decisions).  ``repro.serving.telemetry.export`` turns these into
+one Perfetto/Chrome-trace track per replica slot.
+
+Zero-cost when disabled: engines default to :data:`NULL_TRACER`, whose
+hooks are no-ops and whose ``enabled = False`` lets the engine skip even
+building the per-dispatch :class:`~repro.serving.telemetry.timeline.StepRecord`.
+Nothing here ever touches a jit-traced code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+# reserved track ids (engine slots occupy 0..n_slots-1)
+TRACK_QUEUE = 1000
+TRACK_STEPS = 1001
+TRACK_ROUTER = 1002
+
+
+@dataclasses.dataclass
+class Span:
+    """A closed or still-open interval on one (replica, track) row."""
+
+    replica: int
+    track: int
+    uid: int
+    name: str
+    start: int                  # engine-step clock
+    end: int | None = None
+    t_start: float | None = None    # wall clock (perf_counter), optional
+    t_end: float | None = None
+    attrs: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def closed(self) -> bool:
+        return self.end is not None
+
+
+@dataclasses.dataclass
+class Event:
+    """An instant marker on one (replica, track) row."""
+
+    replica: int
+    track: int
+    uid: int
+    name: str
+    step: int
+    t: float | None = None
+    attrs: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class _RequestState:
+    """Per-request open-span bookkeeping (host-side only)."""
+
+    uid: int
+    replica: int
+    submit_step: int
+    prompt_len: int
+    queued: Span | None = None
+    decode: Span | None = None
+    finished: bool = False
+
+
+class NullTracer:
+    """The disabled tracer: every hook is a no-op, ``enabled`` is False
+    so engines skip building records entirely.  ``bind`` and friends
+    return ``self`` so one singleton serves every call site."""
+
+    enabled = False
+    round = 0
+
+    def on_submit(self, replica, req, step):
+        pass
+
+    def on_admit(self, replica, req, step, slot, n_tokens, refold=False):
+        pass
+
+    def on_chunk(self, replica, req, slot, start_step, end_step, pos,
+                 n_valid, bucket, last):
+        pass
+
+    def on_first_token(self, replica, req, step, slot, first=True):
+        pass
+
+    def on_finish(self, replica, req, step, slot):
+        pass
+
+    def on_preempt(self, replica, req, step, slot):
+        pass
+
+    def on_boundary_pack(self, replica, req, step, slot):
+        pass
+
+    def on_step(self, record):
+        pass
+
+    def on_route(self, uid, replica, policy, rank_pos, hit_tokens, probed):
+        pass
+
+    def wall(self):
+        return None
+
+
+NULL_TRACER = NullTracer()
+
+
+class Tracer:
+    """Collects spans/events/step records from engines and the cluster
+    router.  One tracer instance may be shared by many replicas — each
+    hook takes the calling replica's index.
+
+    The engine-step clock is **per replica** (each engine counts its own
+    dispatches); the exporter keeps replicas on separate process rows so
+    the clocks never mix.  ``wall=True`` additionally stamps every record
+    with ``time.perf_counter()`` for cross-replica alignment.
+    """
+
+    enabled = True
+
+    def __init__(self, wall: bool = False):
+        self.use_wall = wall
+        self.spans: list[Span] = []
+        self.events: list[Event] = []
+        self.steps: list = []                   # StepRecord, append order
+        self.requests: dict[tuple[int, int], _RequestState] = {}
+        self.round = 0                          # cluster round (set by Cluster)
+
+    def wall(self) -> float | None:
+        return time.perf_counter() if self.use_wall else None
+
+    # ------------------------------------------------------ request lifecycle
+    def _state(self, replica: int, req) -> _RequestState:
+        key = (replica, req.uid)
+        st = self.requests.get(key)
+        if st is None:
+            st = _RequestState(uid=req.uid, replica=replica, submit_step=0,
+                               prompt_len=len(req.prompt))
+            self.requests[key] = st
+        return st
+
+    def _event(self, replica, track, uid, name, step, **attrs) -> None:
+        self.events.append(Event(replica=replica, track=track, uid=uid,
+                                 name=name, step=step, t=self.wall(),
+                                 attrs=attrs))
+
+    def on_submit(self, replica: int, req, step: int) -> None:
+        st = self._state(replica, req)
+        st.submit_step = step
+        st.queued = Span(replica=replica, track=TRACK_QUEUE, uid=req.uid,
+                         name="queued", start=step, t_start=self.wall(),
+                         attrs={"prompt_len": len(req.prompt)})
+        self.spans.append(st.queued)
+
+    def on_admit(self, replica: int, req, step: int, slot: int,
+                 n_tokens: int, refold: bool = False) -> None:
+        """Close the queued span; a re-admission after preemption also
+        emits ``refolded`` (generated tokens folded into the prefill)."""
+        st = self._state(replica, req)
+        if st.queued is not None and not st.queued.closed:
+            st.queued.end = step
+            st.queued.t_end = self.wall()
+        st.queued = None
+        self._event(replica, slot, req.uid, "admitted", step,
+                    slot=slot, n_tokens=n_tokens)
+        if refold:
+            self._event(replica, slot, req.uid, "refolded", step,
+                        slot=slot, n_tokens=n_tokens)
+
+    def on_chunk(self, replica: int, req, slot: int, start_step: int,
+                 end_step: int, pos: int, n_valid: int,
+                 bucket: int | None, last: bool) -> None:
+        """One executed prefill chunk (a whole decode-only prefill is one
+        chunk covering its ceil(L/prefill_chunk)-step cost)."""
+        self.spans.append(Span(
+            replica=replica, track=slot, uid=req.uid, name="prefill_chunk",
+            start=start_step, end=end_step, t_end=self.wall(),
+            attrs={"pos": pos, "n_valid": n_valid, "bucket": bucket,
+                   "last": last},
+        ))
+
+    def on_first_token(self, replica: int, req, step: int, slot: int,
+                       first: bool = True) -> None:
+        """Prefill completed: open the decode span.  ``first`` is False on
+        a post-preemption re-admission (the true first token was already
+        emitted before the preemption)."""
+        st = self._state(replica, req)
+        if first:
+            self._event(replica, slot, req.uid, "first_token", step,
+                        slot=slot)
+        st.decode = Span(replica=replica, track=slot, uid=req.uid,
+                         name="decode", start=step, t_start=self.wall())
+        self.spans.append(st.decode)
+
+    def on_finish(self, replica: int, req, step: int, slot: int) -> None:
+        st = self._state(replica, req)
+        if st.decode is not None and not st.decode.closed:
+            st.decode.end = step
+            st.decode.t_end = self.wall()
+            st.decode.attrs["generated"] = len(req.out_tokens)
+        st.decode = None
+        st.finished = True
+        self._event(replica, slot, req.uid, "finish", step,
+                    generated=len(req.out_tokens))
+
+    def on_preempt(self, replica: int, req, step: int, slot: int) -> None:
+        """Eviction to the queue: the decode span ends here (marked), and
+        a fresh queued span opens — the request is waiting again."""
+        st = self._state(replica, req)
+        if st.decode is not None and not st.decode.closed:
+            st.decode.end = step
+            st.decode.t_end = self.wall()
+            st.decode.attrs["preempted"] = True
+        st.decode = None
+        self._event(replica, slot, req.uid, "preempted", step, slot=slot)
+        st.queued = Span(replica=replica, track=TRACK_QUEUE, uid=req.uid,
+                         name="queued", start=step, t_start=self.wall(),
+                         attrs={"requeued": True})
+        self.spans.append(st.queued)
+
+    def on_boundary_pack(self, replica: int, req, step: int, slot: int) -> None:
+        self._event(replica, slot, req.uid, "boundary_packed", step,
+                    slot=slot)
+
+    # ------------------------------------------------------------- timeline
+    def on_step(self, record) -> None:
+        """Append one per-dispatch StepRecord (built by the engine only
+        when ``enabled`` — see ``Engine._trace_step``)."""
+        self.steps.append(record)
+
+    # --------------------------------------------------------------- router
+    def on_route(self, uid: int, replica: int, policy: str, rank_pos: int,
+                 hit_tokens: int, probed: int) -> None:
+        """A cluster routing decision, stamped on the cluster round clock
+        (``self.round``, maintained by ``Cluster.step``)."""
+        self._event(-1, TRACK_ROUTER, uid, "route", self.round,
+                    chosen=replica, policy=policy, spill=rank_pos > 0,
+                    rank_pos=rank_pos, hit_tokens=hit_tokens, probed=probed)
+
+    # ---------------------------------------------------------- introspection
+    def replicas(self) -> list[int]:
+        """Replica indices that produced any record (cluster row -1 excluded)."""
+        seen = {s.replica for s in self.spans}
+        seen |= {e.replica for e in self.events}
+        seen |= {r.replica for r in self.steps}
+        return sorted(i for i in seen if i >= 0)
