@@ -14,6 +14,9 @@ them against the committed ``benchmarks/baseline.json``:
   absolute tokens/s would not);
 * ``paged_batch_gain`` — paged vs dense effective decode batch under the
   same HBM budget (pure ``eval_shape`` arithmetic, deterministic);
+* ``fp8_batch_gain`` — fp8-quantized vs bf16 paged effective batch under
+  the same device KV byte budget (eval_shape arithmetic, deterministic;
+  the KV-tiering capacity claim);
 * ``cluster_speedup_2r`` / ``affinity_hit_rate`` — cluster tokens/round
   scaling at 2 replicas over 1, and the prefix-affinity router's
   resident-prefix hit-rate (both counted in deterministic rounds/tokens);
@@ -67,6 +70,7 @@ GATED = {
     "mean_ttft_steps": ("lower", 1.0),
     "async_speedup": ("higher", 2.0),
     "paged_batch_gain": ("higher", 1.0),
+    "fp8_batch_gain": ("higher", 1.0),
     "cluster_speedup_2r": ("higher", 1.0),
     "affinity_hit_rate": ("higher", 1.0),
     "kernel_decode_err": ("lower", 8.0),

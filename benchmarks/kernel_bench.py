@@ -79,6 +79,25 @@ def main(print_fn=print, smoke: bool = False) -> dict:
                         - ref.paged_decode_attention(q, kp, vp, tables, lengths)))
     )
     print_fn(f"paged_decode_attention_b{B}s{S}g{G}bs{bs},{t_kern:.0f},{t_ref:.0f},{err:.2e}")
+
+    # quantized paged decode: fp8 payload + per-vector scales, dequant
+    # inside the kernel.  The accuracy column is vs the *full-precision*
+    # oracle — the end-to-end error the fp8 KV tier actually adds — and
+    # kernel correctness itself is the tiny gap vs the dequantized oracle.
+    kq, k_scale = ref.kv_quantize(kp, "fp8")
+    vq, v_scale = ref.kv_quantize(vp, "fp8")
+    t_kern = _time(lambda: ops.paged_decode_attention(
+        q, kq, vq, tables, lengths, k_scale=k_scale, v_scale=v_scale), n=reps)
+    full = ref.paged_decode_attention(q, kp, vp, tables, lengths)
+    out_q = ops.paged_decode_attention(q, kq, vq, tables, lengths,
+                                       k_scale=k_scale, v_scale=v_scale)
+    exp_q = ref.paged_decode_attention(q, kq, vq, tables, lengths,
+                                       k_scale=k_scale, v_scale=v_scale)
+    q_err = float(jnp.max(jnp.abs(out_q - full)))       # quantization error
+    k_err = float(jnp.max(jnp.abs(out_q - exp_q)))      # kernel-vs-oracle
+    print_fn(f"paged_decode_fp8_b{B}s{S}g{G}bs{bs},{t_kern:.0f},{t_ref:.0f},{q_err:.2e}")
+    metrics["kernel_decode_fp8_quant_err"] = q_err
+    metrics["kernel_decode_fp8_err"] = k_err
     return metrics
 
 

@@ -12,6 +12,13 @@ bench quantifies what paging buys under that constraint:
 * **live run** (reduced config, CPU): both engine modes serve the same
   mixed-length workload; asserts identical greedy tokens and reports
   pool stats (allocs, prefix-cache hits, COW copies).
+
+The KV-tiering rows quantify the second capacity lever: an fp8 pool
+stores ~half the bytes per block (payload 1 B/elem + per-vector scales),
+so the same device budget holds ~2x the sequences
+(``fp8_batch_gain``, gated in CI), and a host tier turns block-pressure
+preemptions into spills — the live demo serves a workload that does not
+fit the device pool with zero preemptions and unchanged greedy tokens.
 """
 from __future__ import annotations
 
@@ -36,6 +43,19 @@ def _bytes_of(tree) -> int:
     )
 
 
+def _pack_blocks(n_blocks: int, block_size: int) -> list[int]:
+    """Greedy-pack the mixed workload into a pool until it is full."""
+    free, lens = n_blocks - 1, []
+    while True:
+        ln = MIXED_LENS[len(lens) % len(MIXED_LENS)]
+        need = -(-ln // block_size)
+        if need > free:
+            break
+        free -= need
+        lens.append(ln)
+    return lens
+
+
 def capacity_rows(arch: str, n_slots: int, max_seq: int, block_size: int,
                   print_fn=print):
     cfg = get_config(arch)
@@ -43,11 +63,17 @@ def capacity_rows(arch: str, n_slots: int, max_seq: int, block_size: int,
     max_blocks = -(-max_seq // block_size)
 
     dense_bytes = _bytes_of(model.cache_shapes(n_slots, max_seq))
-    # paged pool sized to the same HBM budget
-    one = _bytes_of(model.paged_cache_shapes(n_slots, 2, block_size, max_blocks))
-    two = _bytes_of(model.paged_cache_shapes(n_slots, 3, block_size, max_blocks))
-    block_bytes = two - one
-    n_blocks = max(2, dense_bytes // block_bytes)
+
+    def pool_fit(**kw) -> int:
+        # paged pool sized to the same HBM budget (per-block bytes from
+        # an eval_shape delta, so scale pools are charged too)
+        one = _bytes_of(
+            model.paged_cache_shapes(n_slots, 2, block_size, max_blocks, **kw)
+        )
+        two = _bytes_of(
+            model.paged_cache_shapes(n_slots, 3, block_size, max_blocks, **kw)
+        )
+        return max(2, dense_bytes // (two - one))
 
     # greedy-pack the mixed workload into each cache until it is full
     lens, i = [], 0
@@ -56,15 +82,9 @@ def capacity_rows(arch: str, n_slots: int, max_seq: int, block_size: int,
         i += 1
     dense_tokens = sum(lens)
 
-    free, paged_lens = n_blocks - 1, []
-    while True:
-        ln = MIXED_LENS[len(paged_lens) % len(MIXED_LENS)]
-        need = -(-ln // block_size)
-        if need > free:
-            break
-        free -= need
-        paged_lens.append(ln)
+    paged_lens = _pack_blocks(pool_fit(), block_size)
     paged_tokens = sum(paged_lens)
+    fp8_lens = _pack_blocks(pool_fit(kv_dtype="fp8"), block_size)
 
     print_fn(
         f"{arch},dense,{n_slots},{dense_tokens},"
@@ -74,7 +94,12 @@ def capacity_rows(arch: str, n_slots: int, max_seq: int, block_size: int,
         f"{arch},paged,{len(paged_lens)},{paged_tokens},"
         f"{dense_bytes / max(paged_tokens, 1):.0f}"
     )
-    return len(paged_lens) / n_slots
+    print_fn(
+        f"{arch},paged_fp8,{len(fp8_lens)},{sum(fp8_lens)},"
+        f"{dense_bytes / max(sum(fp8_lens), 1):.0f}"
+    )
+    return (len(paged_lens) / n_slots,
+            len(fp8_lens) / max(len(paged_lens), 1))
 
 
 def live_run(print_fn=print):
@@ -106,16 +131,51 @@ def live_run(print_fn=print):
     print_fn(f"# pool:  {eng.pool.stats}")
     assert identical, "paged decode diverged from dense"
 
+    # fp8 pool: greedy tokens stay faithful (prefill stages in bf16, so
+    # first tokens are exact; later tokens may drift within quant noise)
+    fp8_reqs, _, feng = serve("paged", block_size=8, kv_dtype="fp8")
+    total = sum(len(r.out_tokens) for r in paged_reqs)
+    same = sum(sum(x == y for x, y in zip(a.out_tokens, b.out_tokens))
+               for a, b in zip(paged_reqs, fp8_reqs))
+    print_fn(f"# fp8 pool: {same}/{total} greedy tokens identical")
+    assert all(r.done for r in fp8_reqs)
+    assert all(a.out_tokens[0] == b.out_tokens[0]
+               for a, b in zip(paged_reqs, fp8_reqs)), "fp8 first token drifted"
+
+    # host tier: a pool too small for both sequences spills its cold
+    # prefix blocks instead of preempting, and decodes identical tokens
+    tight = [np.arange(1, 10, dtype=np.int32), np.arange(3, 8, dtype=np.int32)]
+
+    def serve2(**kw):
+        eng = Engine(model, params, n_slots=2, max_seq=32, cache_kind="paged",
+                     block_size=4, **kw)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=10)
+                for i, p in enumerate(tight)]
+        for r in reqs:
+            eng.submit(r)
+        return reqs, eng.run(), eng
+
+    ref_reqs, _, _ = serve2()
+    sp_reqs, sp_stats, se = serve2(n_blocks=9, host_blocks=8)
+    print_fn(f"# host tier: spills={sp_stats.spills} "
+             f"preemptions={sp_stats.preemptions} "
+             f"host_peak={se.pool.stats.host_peak_in_use} blocks")
+    assert sp_stats.spills >= 1, "tight pool never spilled"
+    assert sp_stats.preemptions == 0, "host tier failed to absorb pressure"
+    assert all(a.out_tokens == b.out_tokens
+               for a, b in zip(ref_reqs, sp_reqs)), "spilled decode diverged"
+
 
 def main(print_fn=print) -> dict:
     print_fn("# paged KV bench: same HBM budget, mixed sequence lengths")
     print_fn("arch,cache,effective_batch,resident_tokens,kv_bytes_per_token")
-    gain = capacity_rows("llama3.2-1b", n_slots=32, max_seq=4096,
-                         block_size=64, print_fn=print_fn)
+    gain, fp8_gain = capacity_rows("llama3.2-1b", n_slots=32, max_seq=4096,
+                                   block_size=64, print_fn=print_fn)
     print_fn(f"# paged effective-batch gain at mixed lengths: {gain:.2f}x")
+    print_fn(f"# fp8 effective-batch gain over bf16 paged: {fp8_gain:.2f}x")
     live_run(print_fn)
     # deterministic (eval_shape arithmetic): gated by ci_gate.py
-    return {"paged_batch_gain": gain}
+    return {"paged_batch_gain": gain, "fp8_batch_gain": fp8_gain}
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ from collections import defaultdict
 from repro.serving.telemetry import validate_trace
 
 
-def check(obj: dict, n_replicas: int) -> list[str]:
+def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False) -> list[str]:
     """Return problem strings (empty = the trace passes the smoke bar)."""
     problems = validate_trace(obj)
     if problems:
@@ -27,12 +27,17 @@ def check(obj: dict, n_replicas: int) -> list[str]:
     events = obj["traceEvents"]
     decodes: dict[int, set[int]] = defaultdict(set)   # replica -> uids
     finishes: dict[int, set[int]] = defaultdict(set)
+    n_spills = 0
     for e in events:
         args = e.get("args", {})
         if e["ph"] == "X" and e["name"].startswith("decode") and e["dur"] >= 0:
             decodes[e["pid"]].add(args.get("uid", -1))
         if e["ph"] == "i" and e["name"] == "finish":
             finishes[e["pid"]].add(args.get("uid", -1))
+        if e["ph"] == "i" and e["name"] == "kv_spill":
+            n_spills += 1
+    if expect_spill_marks and n_spills == 0:
+        problems.append("no kv_spill marks (host-tier smoke expected >= 1)")
     for r in range(n_replicas):
         complete = decodes.get(r, set()) & finishes.get(r, set())
         if not complete:
@@ -49,13 +54,16 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("trace", help="Chrome-trace JSON written by --trace")
     ap.add_argument("--replicas", type=int, default=1,
                     help="replica count that must each show a complete span")
+    ap.add_argument("--expect-spill-marks", action="store_true",
+                    help="require at least one kv_spill instant event "
+                         "(the host-KV-tier serve smoke)")
     args = ap.parse_args(argv)
     try:
         obj = json.loads(open(args.trace).read())
     except (OSError, ValueError) as e:
         print(f"cannot read trace {args.trace}: {e}", file=sys.stderr)
         return 1
-    problems = check(obj, args.replicas)
+    problems = check(obj, args.replicas, args.expect_spill_marks)
     if problems:
         print(f"trace check FAILED for {args.trace}:", file=sys.stderr)
         for p in problems:

@@ -86,13 +86,23 @@ def paged_decode_attention(
     lengths: jax.Array,       # (B,)
     *,
     scale: float | None = None,
-) -> jax.Array:
+    starts: jax.Array | None = None,    # (B,) first hot position
+    k_scale: jax.Array | None = None,   # (N_blocks, Hkv, block_size) f32
+    v_scale: jax.Array | None = None,
+    return_lse: bool = False,
+):
     """One decode step against the paged block pool, in the HPU layout.
 
     The pool's *block* axis (not the batch axis) is what the HPU lanes
     split — a physical block lives wholly on one lane, so a sequence's
     block-table gather fans out across whichever lanes hold its blocks
     and the boundary traffic stays the per-token Q/K/V descriptors.
+
+    Tiered-KV params (see ``kernels/ops.paged_decode_attention``):
+    ``k_scale``/``v_scale`` mark an int8/fp8 pool dequantized in-kernel,
+    ``starts`` restricts attention to the hot window ``[start, length)``,
+    and ``return_lse`` returns ``(out, lse (B,Hkv,G))`` for the
+    log-sum-exp merge with a cold-tier partial.
     """
     if env.axes and env.offload == "hpu":
         from repro.core.placement import PAGED_KV_CACHE_AXES
@@ -105,20 +115,33 @@ def paged_decode_attention(
         from repro.kernels import ops
 
         out = ops.paged_decode_attention(
-            q, k_pool, v_pool, block_tables, lengths, scale=scale
+            q, k_pool, v_pool, block_tables, lengths, scale=scale,
+            starts=starts, k_scale=k_scale, v_scale=v_scale,
+            return_lse=return_lse,
         )
     else:
         # gather-to-contiguous oracle path: identical math to the dense
         # decode (valid positions land at the same indices, pad is masked)
-        from repro.kernels.ref import gather_paged_cache
+        from repro.kernels import ref
 
-        k = gather_paged_cache(k_pool, block_tables)
-        v = gather_paged_cache(v_pool, block_tables)
-        out = attn.decode_attention(
-            q, k, v, lengths, scale=scale,
-            acc_dtype=jnp.bfloat16 if env.bf16_combine else jnp.float32,
-        )
+        if starts is None and k_scale is None and not return_lse:
+            k = ref.gather_paged_cache(k_pool, block_tables)
+            v = ref.gather_paged_cache(v_pool, block_tables)
+            out = attn.decode_attention(
+                q, k, v, lengths, scale=scale,
+                acc_dtype=jnp.bfloat16 if env.bf16_combine else jnp.float32,
+            )
+        else:
+            out = ref.paged_decode_attention(
+                q, k_pool, v_pool, block_tables, lengths, scale=scale,
+                starts=starts, k_scale=k_scale, v_scale=v_scale,
+                return_lse=return_lse,
+            )
     if env.axes and env.offload == "hpu":
+        if return_lse:
+            o, lse = out
+            o = _wsc(o, env.act_spec(("batch", "heads", "head_dim"), o.shape))
+            return o, lse
         out = _wsc(out, env.act_spec(("batch", "heads", "head_dim"), out.shape))
     return out
 

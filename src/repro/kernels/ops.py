@@ -60,7 +60,7 @@ def decode_attention(
     return out.reshape(B, Hq, D)
 
 
-@functools.partial(jax.jit, static_argnames=("scale",))
+@functools.partial(jax.jit, static_argnames=("scale", "return_lse"))
 def paged_decode_attention(
     q: jax.Array,             # (B, Hq, D) — model layout
     k_pool: jax.Array,        # (N_blocks, Hkv, block_size, D) — kernel-native
@@ -68,7 +68,17 @@ def paged_decode_attention(
     block_tables: jax.Array,  # (B, max_blocks) int32
     lengths: jax.Array,       # (B,)
     scale: float | None = None,
-) -> jax.Array:
+    *,
+    starts: jax.Array | None = None,    # (B,) first hot position
+    k_scale: jax.Array | None = None,   # (N_blocks, Hkv, block_size) f32
+    v_scale: jax.Array | None = None,
+    return_lse: bool = False,
+):
+    """Tiered-KV params: ``k_scale``/``v_scale`` mark the pools as
+    int8/fp8 payloads dequantized inside the kernel; ``starts`` restricts
+    attention to the hot window ``[start, length)``; ``return_lse``
+    additionally returns the per-row log-sum-exp ``(B, Hkv, G) f32`` for
+    :func:`repro.kernels.ref.lse_merge`."""
     B, Hq, D = q.shape
     N, Hkv, bs, _ = k_pool.shape
     G = Hq // Hkv
@@ -77,12 +87,16 @@ def paged_decode_attention(
     # the pool is stored kernel-native (see paged_cache_defs): only the
     # tiny per-token q needs packing, the bandwidth-bound KV streams as-is
     qk = q.reshape(B, Hkv, G, D)                  # pack GQA group
-    out = paged_decode_attention_pallas(
+    out, lse = paged_decode_attention_pallas(
         qk, k_pool, v_pool,
         block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-        scale=scale, interpret=_interpret(),
+        scale=scale, starts=starts, k_scale=k_scale, v_scale=v_scale,
+        interpret=_interpret(),
     )
-    return out.reshape(B, Hq, D)
+    out = out.reshape(B, Hq, D)
+    if return_lse:
+        return out, lse[..., 0]                   # (B, Hkv, G)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q", "block_k"))
@@ -95,16 +109,22 @@ def flash_attention(
     q_offset: jax.Array | int = 0,
     block_q: int = 512,
     block_k: int = 512,
+    k_scale: jax.Array | None = None,   # (B, Sk, Hkv) f32
+    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """``q_offset`` (traced scalar) is the absolute position of q[:, 0] —
     chunked-prefill continuation attends a (Sq=chunk) query block against
-    a (Sk=cache) KV window without recompiling per offset."""
+    a (Sk=cache) KV window without recompiling per offset.
+    ``k_scale``/``v_scale`` mark k/v as int8/fp8 payloads dequantized
+    per stored vector inside the kernel."""
     B, Sq, Hq, D = q.shape
     Sk = k.shape[1]
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     qk = jnp.swapaxes(q, 1, 2)  # (B, Hq, Sq, D)
     kk = jnp.swapaxes(k, 1, 2)
     vk = jnp.swapaxes(v, 1, 2)
+    ks = None if k_scale is None else jnp.swapaxes(k_scale, 1, 2)  # (B,Hkv,Sk)
+    vs = None if v_scale is None else jnp.swapaxes(v_scale, 1, 2)
     bq = min(block_q, Sq)
     bk = min(block_k, Sk)
     while Sq % bq:
@@ -113,6 +133,7 @@ def flash_attention(
         bk //= 2
     out = flash_attention_pallas(
         qk, kk, vk, scale=scale, causal=causal, q_offset=q_offset,
+        k_scale=ks, v_scale=vs,
         block_q=max(bq, 1), block_k=max(bk, 1), interpret=_interpret(),
     )
     return jnp.swapaxes(out, 1, 2)

@@ -17,6 +17,23 @@ VMEM scratch accumulators carry running max/denominator per (batch, kv
 head).  Unused table entries point at physical block 0 (the engine's
 null block) — their scores are masked by ``lengths`` so the garbage they
 gather never contributes.
+
+Tiered-KV extensions (all optional, zero-cost when unused):
+
+* **quantized pools** — when ``k_scale``/``v_scale`` pools are passed
+  (``(N_blocks, Hkv, block_size)`` f32, one absmax scale per stored
+  vector), the K/V pools hold int8 or fp8 payloads and the kernel
+  dequantizes *inside* the block loop, right after the HBM->VMEM DMA:
+  the bandwidth-bound stream moves at 1 byte/elem and widens to f32 only
+  in VMEM.
+* **``starts``** — per-sequence first *hot* position: positions below it
+  are masked exactly like positions past ``lengths``.  This is the hot
+  half of the HGCA-style hybrid: cold (host-offloaded) prefix blocks are
+  attended elsewhere and merged by log-sum-exp.
+* **log-sum-exp output** — the kernel always returns ``(out, lse)`` with
+  ``lse = m + log(l)`` per (batch, kv head, group) row, the exact
+  quantity LSE merging needs.  A window with no valid positions yields
+  ``lse <= NEG_INF`` so its merge weight underflows to 0 (never NaN).
 """
 from __future__ import annotations
 
@@ -35,17 +52,19 @@ NEG_INF = -1e30
 def _paged_decode_kernel(
     tables_ref,   # SMEM (B, MB) int32 — consumed by the index maps
     lengths_ref,  # SMEM (B,)
+    starts_ref,   # SMEM (B,) — first hot position (0 = whole sequence)
     q_ref,        # (1, 1, G, D)
     k_ref,        # (1, 1, block_size, D) — physical block tables[b, s]
     v_ref,        # (1, 1, block_size, D)
-    o_ref,        # (1, 1, G, D)
-    m_ref,        # VMEM scratch (G, 1) f32
-    l_ref,        # VMEM scratch (G, 1) f32
-    acc_ref,      # VMEM scratch (G, D) f32
-    *,
+    *rest,        # [ks_ref, vs_ref,] o_ref, lse_ref, m/l/acc scratch
     scale: float,
     block_size: int,
+    quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, lse_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     s = pl.program_id(2)
     n_s = pl.num_programs(2)
@@ -59,10 +78,15 @@ def _paged_decode_kernel(
     q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
     k = k_ref[0, 0].astype(jnp.float32)          # (block_size, D)
     v = v_ref[0, 0].astype(jnp.float32)
+    if quantized:
+        # per-vector absmax scales: dequant right after the VMEM load
+        k = k * ks_ref[0, 0][:, None]            # (block_size, 1)
+        v = v * vs_ref[0, 0][:, None]
 
     length = lengths_ref[b]
+    start = starts_ref[b]
     k_pos = s * block_size + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
-    valid = k_pos < length                        # (1, block_size)
+    valid = (k_pos >= start) & (k_pos < length)   # (1, block_size)
 
     scores = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -84,8 +108,12 @@ def _paged_decode_kernel(
 
     @pl.when(s == n_s - 1)
     def _finalize():
-        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)
         o_ref[0, 0] = out.astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_ref[...] + jnp.log(jnp.maximum(l, 1e-30))).astype(
+            lse_ref.dtype
+        )
 
 
 def paged_decode_attention_pallas(
@@ -96,27 +124,49 @@ def paged_decode_attention_pallas(
     lengths: jax.Array,       # (B,) int32
     *,
     scale: float,
+    starts: jax.Array | None = None,    # (B,) int32 first hot position
+    k_scale: jax.Array | None = None,   # (N_blocks, Hkv, block_size) f32
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
-) -> jax.Array:
+) -> tuple[jax.Array, jax.Array]:
+    """Returns ``(out (B,Hkv,G,D), lse (B,Hkv,G,1) f32)``."""
     B, Hkv, G, D = q.shape
     _, _, block_size, _ = k_pool.shape
     MB = block_tables.shape[1]
+    quantized = k_scale is not None
+    if starts is None:
+        starts = jnp.zeros((B,), jnp.int32)
+
+    def _q_idx(b, h, s, tables, lens, st):
+        return (b, h, 0, 0)
+
+    def _kv_idx(b, h, s, tables, lens, st):
+        return (tables[b, s], h, 0, 0)
+
+    def _scale_idx(b, h, s, tables, lens, st):
+        return (tables[b, s], h, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), _q_idx),
+        pl.BlockSpec((1, 1, block_size, D), _kv_idx),
+        pl.BlockSpec((1, 1, block_size, D), _kv_idx),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, block_size), _scale_idx),
+            pl.BlockSpec((1, 1, block_size), _scale_idx),
+        ]
+        operands += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, Hkv, MB),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, s, tables, lens: (b, h, 0, 0)),
-            pl.BlockSpec(
-                (1, 1, block_size, D),
-                lambda b, h, s, tables, lens: (tables[b, s], h, 0, 0),
-            ),
-            pl.BlockSpec(
-                (1, 1, block_size, D),
-                lambda b, h, s, tables, lens: (tables[b, s], h, 0, 0),
-            ),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, G, D), _q_idx),
+            pl.BlockSpec((1, 1, G, 1), _q_idx),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s, tables, lens: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
@@ -124,14 +174,19 @@ def paged_decode_attention_pallas(
         ],
     )
     kernel = functools.partial(
-        _paged_decode_kernel, scale=scale, block_size=block_size
+        _paged_decode_kernel, scale=scale, block_size=block_size,
+        quantized=quantized,
     )
-    return pl.pallas_call(
+    out, lse = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, 1), jnp.float32),
+        ],
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-    )(block_tables, lengths, q, k_pool, v_pool)
+    )(block_tables, lengths, starts.astype(jnp.int32), *operands)
+    return out, lse

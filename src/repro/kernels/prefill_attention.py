@@ -13,6 +13,12 @@ of q[:, 0] for chunked-prefill continuation: a (Sq, Sk) = (chunk, cache)
 call attends the chunk against all earlier cache positions while staying
 causal inside the chunk.  It is a traced scalar — serving one prompt at
 many offsets reuses a single compiled kernel.
+
+Optional ``k_scale``/``v_scale`` ((B, Hkv, Sk) f32, one absmax scale per
+stored KV vector) mark the K/V operands as int8/fp8 payloads: the kernel
+dequantizes right after the HBM->VMEM load, so a quantized KV window
+streams at 1 byte/elem and widens to f32 only in VMEM (the tiered-KV
+counterpart of the paged decode kernel's quantized pools).
 """
 from __future__ import annotations
 
@@ -35,16 +41,17 @@ def _flash_kernel(
     q_ref,    # (1, 1, BQ, D)
     k_ref,    # (1, 1, BK, D)
     v_ref,    # (1, 1, BK, D)
-    o_ref,    # (1, 1, BQ, D)
-    m_ref,    # VMEM (BQ, 1) f32
-    l_ref,    # VMEM (BQ, 1) f32
-    acc_ref,  # VMEM (BQ, D) f32
-    *,
+    *rest,    # [ks_ref, vs_ref (1, 1, BK),] o_ref, m/l/acc scratch
     scale: float,
     block_q: int,
     block_k: int,
     causal: bool,
+    quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     iq = pl.program_id(2)
     ik = pl.program_id(3)
     n_k = pl.num_programs(3)
@@ -60,6 +67,10 @@ def _flash_kernel(
         q = q_ref[0, 0].astype(jnp.float32)
         k = k_ref[0, 0].astype(jnp.float32)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            # per-vector absmax scales: dequant right after the VMEM load
+            k = k * ks_ref[0, 0][:, None]
+            v = v * vs_ref[0, 0][:, None]
         scores = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                                              # (BQ, BK)
@@ -106,6 +117,8 @@ def flash_attention_pallas(
     scale: float,
     causal: bool = True,
     q_offset: jax.Array | int = 0,
+    k_scale: jax.Array | None = None,   # (B, Hkv, Sk) f32
+    v_scale: jax.Array | None = None,
     block_q: int = DEFAULT_BLOCK_Q,
     block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
@@ -117,22 +130,35 @@ def flash_attention_pallas(
     block_k = min(block_k, Sk)
     assert Sq % block_q == 0 and Sk % block_k == 0
     off = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    quantized = k_scale is not None
+
+    def _q_idx(b, h, iq, ik, off):
+        return (b, h, iq, 0)
+
+    def _kv_idx(b, h, iq, ik, off):
+        return (b, h // G, ik, 0)
+
+    def _scale_idx(b, h, iq, ik, off):
+        return (b, h // G, ik)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, D), _q_idx),
+        pl.BlockSpec((1, 1, block_k, D), _kv_idx),
+        pl.BlockSpec((1, 1, block_k, D), _kv_idx),
+    ]
+    operands = [q, k, v]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, 1, block_k), _scale_idx),
+            pl.BlockSpec((1, 1, block_k), _scale_idx),
+        ]
+        operands += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hq, Sq // block_q, Sk // block_k),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik, off: (b, h, iq, 0)),
-            pl.BlockSpec(
-                (1, 1, block_k, D), lambda b, h, iq, ik, off: (b, h // G, ik, 0)
-            ),
-            pl.BlockSpec(
-                (1, 1, block_k, D), lambda b, h, iq, ik, off: (b, h // G, ik, 0)
-            ),
-        ],
-        out_specs=pl.BlockSpec(
-            (1, 1, block_q, D), lambda b, h, iq, ik, off: (b, h, iq, 0)
-        ),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, block_q, D), _q_idx),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -140,7 +166,8 @@ def flash_attention_pallas(
         ],
     )
     kernel = functools.partial(
-        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k, causal=causal
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, quantized=quantized,
     )
     return pl.pallas_call(
         kernel,
@@ -150,4 +177,4 @@ def flash_attention_pallas(
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
-    )(off, q, k, v)
+    )(off, *operands)

@@ -6,6 +6,11 @@
 Add ``--cache paged [--block-size 16] [--blocks N]`` to serve from the
 paged block pool (admission gated on free blocks, prefix sharing,
 preemption under block pressure) instead of the dense per-slot cache.
+``--kv-dtype {fp8,int8}`` stores the pool quantized with per-vector
+scales (~2x effective KV capacity per device byte), and
+``--host-blocks N`` adds a host KV tier: cold prefix blocks spill there
+instead of forcing preemption, and spilled sequences keep decoding via
+LSE-merged hybrid attention over the split hot/cold KV.
 
 Add ``--schedule hybrid [--prefill-chunk 32] [--token-budget N]`` to run
 the token-budget scheduler: each iteration fuses a bucket-padded prefill
@@ -86,6 +91,16 @@ def main():
     ap.add_argument("--blocks", type=int, default=None,
                     help="paged: pool size incl. null block "
                          "(default: dense-equivalent budget)")
+    ap.add_argument("--kv-dtype", choices=("bf16", "fp8", "int8"),
+                    default="bf16",
+                    help="paged: KV block storage dtype; fp8/int8 store "
+                         "quantized blocks with per-vector scales (~2x KV "
+                         "capacity at the same device byte budget)")
+    ap.add_argument("--host-blocks", type=int, default=0,
+                    help="paged: host-tier KV blocks; cold shared-prefix "
+                         "blocks spill here instead of forcing preemption, "
+                         "and spilled sequences keep decoding via LSE-merged "
+                         "hybrid attention")
     ap.add_argument("--schedule", choices=("decode-only", "hybrid"),
                     default="decode-only",
                     help="hybrid: fuse chunked prefill into decode steps")
@@ -134,6 +149,7 @@ def main():
         sampler=sampler,
         sub_batches=args.sub_batches,
         cache_kind=args.cache, block_size=args.block_size, n_blocks=args.blocks,
+        kv_dtype=args.kv_dtype, host_blocks=args.host_blocks,
         schedule=args.schedule, prefill_chunk=args.prefill_chunk,
         token_budget=args.token_budget,
         async_mode=args.async_mode == "on",
@@ -194,6 +210,11 @@ def main():
               f"{stats.generated/max(stats.decode_steps*args.slots,1):.0%})")
         if args.cache == "paged":
             print(f"pool: {eng.pool.stats} kv_bytes={eng.kv_bytes()}")
+            if args.host_blocks:
+                print(f"kv tier: spills={stats.spills} "
+                      f"rehydrations={stats.rehydrations} "
+                      f"host_peak={eng.pool.stats.host_peak_in_use}"
+                      f"/{args.host_blocks} blocks")
     if args.trace:
         path = write_trace(tracer, args.trace)
         print(f"trace: {path} (open at ui.perfetto.dev)")

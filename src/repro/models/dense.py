@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import offload
 from repro.core.placement import Env
+from repro.kernels import ref
 from repro.models import common as cm
 from repro.models.common import ParamDef
 from repro.serving.sampler import sample_on_device
@@ -172,7 +173,8 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Pytree:
 # paged cache (block pool + per-slot block tables; serving/paged/)
 # ---------------------------------------------------------------------------
 def paged_cache_defs(
-    cfg, n_slots: int, n_blocks: int, block_size: int, max_blocks: int
+    cfg, n_slots: int, n_blocks: int, block_size: int, max_blocks: int,
+    kv_dtype: str = "bf16", host_blocks: int = 0,
 ) -> Pytree:
     """Physical KV as a pool of fixed-size blocks shared by all slots.
 
@@ -187,6 +189,17 @@ def paged_cache_defs(
     relayout.  A transposed layout would materialize a full-pool copy
     per layer per token: exactly the HBM traffic the paper's design
     removes.
+
+    Tiered-KV extensions: ``kv_dtype`` in {"fp8", "int8"} stores the
+    pool quantized with per-vector f32 absmax scale pools
+    (``k_scale``/``v_scale``, one scale per stored (head, position)
+    vector — ~``4/(2*Dh)`` relative overhead); ``host_blocks > 0`` adds a
+    host-tier pool (``host_k``/``host_v`` + per-slot ``host_tables`` and
+    ``cold_lengths``) holding spilled cold prefix blocks, with host id 0
+    reserved as the null block like the device pool.  Host leaves are
+    deliberately *unsharded* (block axis placement ``None``): they model
+    host DRAM, not HBM, and their bytes are excluded from the device KV
+    budget accounting.
     """
     L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim()
     kv = ParamDef(
@@ -194,22 +207,77 @@ def paged_cache_defs(
         ("layers", "kv_blocks", "kv_heads", "kv_seq", "head_dim"),
         "zeros",
     )
-    return {
+    defs = {
         "k": kv,
         "v": kv,
         "block_tables": ParamDef((n_slots, max_blocks), ("kv_batch", None), "zeros"),
         "lengths": ParamDef((n_slots,), ("kv_batch",), "zeros"),
     }
+    quant = kv_dtype in ("fp8", "int8")
+    if quant:
+        sc = ParamDef(
+            (L, n_blocks, Hkv, block_size),
+            ("layers", "kv_blocks", "kv_heads", "kv_seq"),
+            "zeros",
+        )
+        defs["k_scale"] = sc
+        defs["v_scale"] = sc
+    if host_blocks > 0:
+        hkv = ParamDef(
+            (L, host_blocks + 1, Hkv, block_size, Dh),
+            ("layers", None, "kv_heads", "kv_seq", "head_dim"),
+            "zeros",
+        )
+        defs["host_k"] = hkv
+        defs["host_v"] = hkv
+        defs["host_tables"] = ParamDef(
+            (n_slots, max_blocks), ("kv_batch", None), "zeros"
+        )
+        defs["cold_lengths"] = ParamDef((n_slots,), ("kv_batch",), "zeros")
+        if quant:
+            hsc = ParamDef(
+                (L, host_blocks + 1, Hkv, block_size),
+                ("layers", None, "kv_heads", "kv_seq"),
+                "zeros",
+            )
+            defs["host_k_scale"] = hsc
+            defs["host_v_scale"] = hsc
+    return defs
+
+
+# kv_dtype name -> pool storage dtype (scales are always f32)
+PAGED_KV_DTYPES = {
+    "bf16": jnp.bfloat16,
+    "fp8": jnp.float8_e4m3fn,
+    "int8": jnp.int8,
+}
+
+
+def _kv_dtype_name(dtype) -> str | None:
+    """Storage dtype -> quantization name (None = unquantized)."""
+    if dtype == jnp.int8:
+        return "int8"
+    if dtype == jnp.float8_e4m3fn:
+        return "fp8"
+    return None
 
 
 def init_paged_cache(
     cfg, n_slots: int, n_blocks: int, block_size: int, max_blocks: int,
-    dtype=jnp.bfloat16,
+    dtype=jnp.bfloat16, kv_dtype: str = "bf16", host_blocks: int = 0,
 ) -> Pytree:
-    if cfg.kv_quant:
-        raise NotImplementedError("paged cache does not support kv_quant yet")
-    defs = paged_cache_defs(cfg, n_slots, n_blocks, block_size, max_blocks)
-    dt = {"block_tables": jnp.int32, "lengths": jnp.int32}
+    if cfg.kv_quant and kv_dtype == "bf16":
+        kv_dtype = "int8"           # cfg-level quant maps onto the int8 tier
+    defs = paged_cache_defs(cfg, n_slots, n_blocks, block_size, max_blocks,
+                            kv_dtype=kv_dtype, host_blocks=host_blocks)
+    pool_dt = PAGED_KV_DTYPES[kv_dtype] if kv_dtype != "bf16" else dtype
+    dt = {
+        "block_tables": jnp.int32, "lengths": jnp.int32,
+        "host_tables": jnp.int32, "cold_lengths": jnp.int32,
+        "k": pool_dt, "v": pool_dt, "host_k": pool_dt, "host_v": pool_dt,
+        "k_scale": jnp.float32, "v_scale": jnp.float32,
+        "host_k_scale": jnp.float32, "host_v_scale": jnp.float32,
+    }
     return {k: jnp.zeros(d.shape, dt.get(k, dtype)) for k, d in defs.items()}
 
 
@@ -221,11 +289,22 @@ def paged_decode_step(cfg, env: Env, params, cache, tokens):
     attention gathers each sequence's blocks through its table.  Inactive
     slots (length 0, table all-null) write to the null block and their
     logits are ignored by the engine.
+
+    The cache pytree's own leaves select the tier statically at trace
+    time: a quantized pool (int8/fp8 ``k`` with ``k_scale``) appends
+    quantized and dequantizes inside the kernel; a host tier (``host_k``
+    present) runs HGCA-style hybrid attention — the device kernel over
+    the hot window ``[cold_len, len]``, the host/oracle path over the
+    spilled cold prefix ``[0, cold_len)``, merged by log-sum-exp — so a
+    spilled sequence keeps decoding without a re-prefill.
     """
     lengths = cache["lengths"]          # (B,) current KV counts
     tables = cache["block_tables"]      # (B, max_blocks) int32
     bs = cache["k"].shape[3]
     B = tokens.shape[0]
+    quant = _kv_dtype_name(cache["k"].dtype)     # None | "fp8" | "int8"
+    hosted = "host_k" in cache
+    cold = cache["cold_lengths"] if hosted else None
     x = cm.embed_lookup(params["embed"], tokens)  # (B, D)
     pos = lengths[:, None]
     bidx = jnp.arange(B)
@@ -233,7 +312,8 @@ def paged_decode_step(cfg, env: Env, params, cache, tokens):
     off = lengths % bs
 
     def scan_body(xc, xs):
-        p, k_l, v_l = xs                # k_l/v_l (n_blocks, Hkv, bs, Dh)
+        p = xs["p"]
+        k_l, v_l = xs["k"], xs["v"]     # (n_blocks, Hkv, bs, Dh)
         h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
         q = jnp.einsum("bd,dhk->bhk", h, p["wq"])
         k = jnp.einsum("bd,dhk->bhk", h, p["wk"])
@@ -242,25 +322,58 @@ def paged_decode_step(cfg, env: Env, params, cache, tokens):
         k = cm.rope(k[:, None], pos, cfg.rope_theta)[:, 0]
         # advanced indices (phys, off) straddle the head slice, so the
         # selected (B, Hkv, Dh) lands batch-first — matching k/v directly
-        k_l = k_l.at[phys, :, off].set(k.astype(k_l.dtype))
-        v_l = v_l.at[phys, :, off].set(v.astype(v_l.dtype))
-        o = offload.paged_decode_attention(env, q, k_l, v_l, tables, lengths + 1)
+        ks_l = vs_l = None
+        if quant:
+            kq, ksc = ref.kv_quantize(k, quant)
+            vq, vsc = ref.kv_quantize(v, quant)
+            ks_l = xs["ks"].at[phys, :, off].set(ksc)
+            vs_l = xs["vs"].at[phys, :, off].set(vsc)
+            k_l = k_l.at[phys, :, off].set(kq)
+            v_l = v_l.at[phys, :, off].set(vq)
+        else:
+            k_l = k_l.at[phys, :, off].set(k.astype(k_l.dtype))
+            v_l = v_l.at[phys, :, off].set(v.astype(v_l.dtype))
+        if hosted:
+            # hybrid: device kernel over the hot window, host/oracle path
+            # over the cold prefix, exact log-sum-exp merge
+            o, lse_h = offload.paged_decode_attention(
+                env, q, k_l, v_l, tables, lengths + 1, starts=cold,
+                k_scale=ks_l, v_scale=vs_l, return_lse=True,
+            )
+            o_c, lse_c = ref.paged_decode_attention(
+                q, xs["hk"], xs["hv"], cache["host_tables"], cold,
+                k_scale=xs.get("hks"), v_scale=xs.get("hvs"),
+                return_lse=True,
+            )
+            o = ref.lse_merge([(o, lse_h), (o_c, lse_c)])
+        else:
+            o = offload.paged_decode_attention(
+                env, q, k_l, v_l, tables, lengths + 1,
+                k_scale=ks_l, v_scale=vs_l,
+            )
         xc = xc + jnp.einsum("bhk,hkd->bd", o, p["wo"])
         h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
         xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
-        return xc, (k_l, v_l)
+        ys = {"k": k_l, "v": v_l}
+        if quant:
+            ys |= {"ks": ks_l, "vs": vs_l}
+        return xc, ys
 
-    x, (k_new, v_new) = jax.lax.scan(
-        scan_body, x, (params["blocks"], cache["k"], cache["v"])
-    )
+    xs = {"p": params["blocks"], "k": cache["k"], "v": cache["v"]}
+    if quant:
+        xs |= {"ks": cache["k_scale"], "vs": cache["v_scale"]}
+    if hosted:
+        xs |= {"hk": cache["host_k"], "hv": cache["host_v"]}
+        if quant:
+            xs |= {"hks": cache["host_k_scale"], "hvs": cache["host_v_scale"]}
+    x, ys = jax.lax.scan(scan_body, x, xs)
     x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = cm.unembed(x, _unembed_table(params), cfg.vocab)
-    return logits, {
-        "k": k_new,
-        "v": v_new,
-        "block_tables": tables,
-        "lengths": lengths + 1,
-    }
+    new_cache = dict(cache)
+    new_cache |= {"k": ys["k"], "v": ys["v"], "lengths": lengths + 1}
+    if quant:
+        new_cache |= {"k_scale": ys["ks"], "v_scale": ys["vs"]}
+    return logits, new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -74,28 +74,34 @@ class Model:
         return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
 
     def paged_cache_specs(
-        self, n_slots: int, n_blocks: int, block_size: int, max_blocks: int
+        self, n_slots: int, n_blocks: int, block_size: int, max_blocks: int,
+        **kw,
     ) -> Pytree:
         """HPU-layout shardings for the paged pool (block axis split across
-        lanes per the ``kv_blocks`` placement rule)."""
+        lanes per the ``kv_blocks`` placement rule).  Extra kwargs
+        (``kv_dtype``, ``host_blocks``) pass through to the family's
+        ``paged_cache_defs``."""
         from repro.core.placement import kv_rules
 
         if self.paged_cache_defs is None:
             raise ValueError(f"{self.cfg.family} has no paged cache")
         policy = self.env.kv_policy if self.env.offload == "hpu" else "none"
         return cm.specs_for(
-            self.paged_cache_defs(n_slots, n_blocks, block_size, max_blocks),
+            self.paged_cache_defs(n_slots, n_blocks, block_size, max_blocks, **kw),
             kv_rules(policy),
             self.env.axes,
         )
 
     def paged_cache_shapes(
-        self, n_slots: int, n_blocks: int, block_size: int, max_blocks: int
+        self, n_slots: int, n_blocks: int, block_size: int, max_blocks: int,
+        **kw,
     ) -> Pytree:
         if self.init_paged_cache is None:
             raise ValueError(f"{self.cfg.family} has no paged cache")
         return jax.eval_shape(
-            lambda: self.init_paged_cache(n_slots, n_blocks, block_size, max_blocks)
+            lambda: self.init_paged_cache(
+                n_slots, n_blocks, block_size, max_blocks, **kw
+            )
         )
 
     def n_params(self) -> int:

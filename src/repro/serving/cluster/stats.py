@@ -61,6 +61,16 @@ class ClusterStats:
         return sum(r.engine.preemptions for r in self.replicas)
 
     @property
+    def kv_spills(self) -> int:
+        """KV blocks spilled to the host tier across replicas (distinct
+        from ``spills``, which counts router spill-over placements)."""
+        return sum(r.engine.spills for r in self.replicas)
+
+    @property
+    def kv_rehydrations(self) -> int:
+        return sum(r.engine.rehydrations for r in self.replicas)
+
+    @property
     def tokens_per_round(self) -> float:
         return self.generated / max(self.rounds, 1)
 

@@ -124,6 +124,8 @@ class EngineStats:
     peak_active: int = 0
     preemptions: int = 0
     victim_drains: int = 0          # async: partial (victim-only) drains
+    spills: int = 0                 # KV blocks copied device -> host tier
+    rehydrations: int = 0           # KV blocks copied host tier -> device
     ttft_steps_sum: int = 0
     ttft_count: int = 0
     # raw per-request samples (ttft: submit->first-token in engine steps;
@@ -208,6 +210,8 @@ class Engine:
         cache_kind: str = "dense",
         block_size: int = 16,
         n_blocks: int | None = None,
+        kv_dtype: str = "bf16",
+        host_blocks: int = 0,
         schedule: str = "decode-only",
         prefill_chunk: int = 32,
         token_budget: int | None = None,
@@ -237,6 +241,13 @@ class Engine:
         )
 
         self._prefill = jax.jit(model.prefill)
+        if cache_kind != "paged" and (kv_dtype != "bf16" or host_blocks):
+            raise ValueError(
+                "kv_dtype / host_blocks are paged-cache features "
+                f"(cache_kind={cache_kind!r})"
+            )
+        self.kv_dtype = kv_dtype
+        self.host_blocks = host_blocks
         if cache_kind == "paged":
             if model.paged_decode_step is None:
                 raise ValueError(f"{model.cfg.family} has no paged decode path")
@@ -255,10 +266,11 @@ class Engine:
                     f"pool of {self.n_blocks - 1} usable blocks cannot hold one "
                     f"max_seq={max_seq} sequence ({self.max_blocks} blocks)"
                 )
-            self.pool = BlockPool(self.n_blocks, block_size)
+            self.pool = BlockPool(self.n_blocks, block_size, host_blocks=host_blocks)
             self.manager = PagedCacheManager(self.pool, n_slots, self.max_blocks)
             self.cache = model.init_paged_cache(
-                n_slots, self.n_blocks, block_size, self.max_blocks
+                n_slots, self.n_blocks, block_size, self.max_blocks,
+                kv_dtype=kv_dtype, host_blocks=host_blocks,
             )
             self._decode = jax.jit(model.paged_decode_step)
             if async_mode:
@@ -325,25 +337,50 @@ class Engine:
             raise NotImplementedError(
                 "hybrid schedule does not compose with sub-batch pipelining yet"
             )
-        # chunk tokens of the prompt being prefilled (set by _begin_prefill)
-        self._inflight_tokens: np.ndarray | None = None
-        self._prefix_blocks = 0
+        # per-slot chunked-prefill state (set by _begin_prefill): the
+        # pinned token stream, prefix-cache-hit block count, and (paged)
+        # the staging lane — boundary packing keeps TWO prompts mid-flight
+        # for one dispatch, so none of this can be a single global
+        self._pf_tokens: dict[int, np.ndarray] = {}
+        self._pf_prefix: dict[int, int] = {}
+        self._pf_lane: dict[int, int] = {}
         sampler = self.sampler
         if self.cache_kind == "paged":
             # persistent staging cache (one fixed shape): chunks accumulate
-            # here, completed blocks flush into the pool
-            self.staging = model.init_cache(1, self.max_blocks * self.block_size)
+            # here, completed blocks flush into the pool.  Two lanes
+            # (batch 2) so a boundary-packed second prompt can stage its
+            # chunks while the finishing prompt still owns its lane.
+            self.staging = model.init_cache(2, self.max_blocks * self.block_size)
 
         if not self.async_mode:
             self._solo = jax.jit(model.prefill_step)
             if self.cache_kind == "paged":
 
-                def _fused(params, cache, staging, dec_tokens, pre_tokens, off, nv):
+                def _fused(params, cache, staging, dec_tokens, pre_tokens, lane, off, nv):
                     pre_logits, staging = model.prefill_step(
-                        params, staging, pre_tokens, 0, off, nv
+                        params, staging, pre_tokens, lane, off, nv
                     )
                     dec_logits, cache = model.paged_decode_step(params, cache, dec_tokens)
                     return dec_logits, pre_logits, cache, staging
+
+                # boundary packing (Sarathi-SC), paged: prompt A's final
+                # chunk and prompt B's head chunk stage in separate lanes
+                # and ride one dispatch with the decode batch
+                def _fused2(params, cache, staging, dec_tokens,
+                            tokA, laneA, offA, nvA, tokB, laneB, offB, nvB):
+                    la, staging = model.prefill_step(params, staging, tokA, laneA, offA, nvA)
+                    lb, staging = model.prefill_step(params, staging, tokB, laneB, offB, nvB)
+                    dec_logits, cache = model.paged_decode_step(params, cache, dec_tokens)
+                    return dec_logits, la, lb, cache, staging
+
+                def _solo2(params, staging, tokA, laneA, offA, nvA,
+                           tokB, laneB, offB, nvB):
+                    la, staging = model.prefill_step(params, staging, tokA, laneA, offA, nvA)
+                    lb, staging = model.prefill_step(params, staging, tokB, laneB, offB, nvB)
+                    return la, lb, staging
+
+                self._fused2 = jax.jit(_fused2)
+                self._solo2 = jax.jit(_solo2)
             else:
 
                 def _fused(params, cache, dec_tokens, pre_tokens, slot, off, nv):
@@ -397,10 +434,10 @@ class Engine:
         if self.cache_kind == "paged":
 
             def _fused_async(params, cache, staging, tok_state, pre_tokens,
-                             slot, off, nv, rng, eos_ids, last):
+                             slot, lane, off, nv, rng, eos_ids, last):
                 r_dec, r_pre = jax.random.split(rng)
                 pre_logits, staging = model.prefill_step(
-                    params, staging, pre_tokens, 0, off, nv
+                    params, staging, pre_tokens, lane, off, nv
                 )
                 dec_logits, cache = model.paged_decode_step(params, cache, tok_state)
                 toks = sample_on_device(dec_logits, r_dec, sampler)
@@ -409,12 +446,45 @@ class Engine:
                 return state, toks, toks == eos_ids, pre_tok, cache, staging
 
             def _solo_async(params, staging, tok_state, pre_tokens,
-                            slot, off, nv, rng, last):
+                            slot, lane, off, nv, rng, last):
                 pre_tok, staging = prefill_sample(
-                    params, staging, pre_tokens, 0, off, nv, rng, sampler=sampler
+                    params, staging, pre_tokens, lane, off, nv, rng, sampler=sampler
                 )
                 state = jnp.where(last, tok_state.at[slot].set(pre_tok[0]), tok_state)
                 return state, pre_tok, staging
+
+            # boundary packing, paged async twins: two staging lanes, A
+            # always completes (final by construction), B splices its
+            # first token only when its head chunk is also its last
+            def _fused2_async(params, cache, staging, tok_state,
+                              tokA, slotA, laneA, offA, nvA,
+                              tokB, slotB, laneB, offB, nvB,
+                              rng, eos_ids, lastB):
+                r_dec, r_a, r_b = jax.random.split(rng, 3)
+                la, staging = model.prefill_step(params, staging, tokA, laneA, offA, nvA)
+                lb, staging = model.prefill_step(params, staging, tokB, laneB, offB, nvB)
+                dec_logits, cache = model.paged_decode_step(params, cache, tok_state)
+                toks = sample_on_device(dec_logits, r_dec, sampler)
+                ta = sample_on_device(la, r_a, sampler)
+                tb = sample_on_device(lb, r_b, sampler)
+                state = toks.at[slotA].set(ta[0])
+                state = jnp.where(lastB, state.at[slotB].set(tb[0]), state)
+                return state, toks, toks == eos_ids, ta, tb, cache, staging
+
+            def _solo2_async(params, staging, tok_state,
+                             tokA, slotA, laneA, offA, nvA,
+                             tokB, slotB, laneB, offB, nvB, rng, lastB):
+                r_a, r_b = jax.random.split(rng)
+                la, staging = model.prefill_step(params, staging, tokA, laneA, offA, nvA)
+                lb, staging = model.prefill_step(params, staging, tokB, laneB, offB, nvB)
+                ta = sample_on_device(la, r_a, sampler)
+                tb = sample_on_device(lb, r_b, sampler)
+                state = tok_state.at[slotA].set(ta[0])
+                state = jnp.where(lastB, state.at[slotB].set(tb[0]), state)
+                return state, ta, tb, staging
+
+            self._fused2 = jax.jit(_fused2_async)
+            self._solo2 = jax.jit(_solo2_async)
         else:
 
             def _fused_async(params, cache, tok_state, pre_tokens,
@@ -702,6 +772,9 @@ class Engine:
         self.slots[slot] = None
         if self.cache_kind == "paged":
             self.manager.free_slot(slot)
+            # dying registered blocks may spill host-ward: copy before
+            # the freed device blocks can be reallocated and rewritten
+            self._apply_pool_directives()
             self.cache = paged_dev.sync_slot(
                 self.cache, slot, self.manager.tables[slot], 0
             )
@@ -772,6 +845,9 @@ class Engine:
                 self._trace_prefill_dispatch(len(full),
                                              self.stats.engine_steps - step0)
             blocks, n_cached = res
+            # host-tier prefix hits re-hydrate: apply the copies before
+            # the prefill's own block writes go out
+            self._apply_pool_directives()
             pad = -(-len(full) // self.block_size) * self.block_size
             sub_cache = self.model.init_cache(1, pad)
             logits, sub_cache = self._prefill(
@@ -822,15 +898,25 @@ class Engine:
         """Pin ``req``'s (possibly re-folded) prompt for chunked prefill;
         returns (first chunk position, total tokens)."""
         full = self._refold(req)
-        self._inflight_tokens = full
+        self._pf_tokens[slot] = full
         if self.cache_kind != "paged":
-            self._prefix_blocks = 0
+            self._pf_prefix[slot] = 0
             return 0, len(full)
         bs = self.block_size
+        # claim a free staging lane (at most two prompts mid-flight: the
+        # boundary-packed newcomer takes whichever lane the finishing
+        # prompt does not hold)
+        lane = 0 if 0 not in self._pf_lane.values() else 1
+        self._pf_lane[slot] = lane
         matched = self.manager.begin_chunked(slot, full)
-        self._prefix_blocks = len(matched)
+        # host-tier hits re-hydrate into fresh device blocks: the copies
+        # must land before the staging reads below consume them
+        self._apply_pool_directives()
+        self._pf_prefix[slot] = len(matched)
         for j, phys in enumerate(matched):
-            self.staging = paged_dev.read_block(self.staging, self.cache, phys, j * bs)
+            self.staging = paged_dev.read_block(
+                self.staging, self.cache, phys, j * bs, lane
+            )
         # a fully prefix-cached prompt still recomputes its last chunk for
         # the first-token logits (pool writes for matched blocks skip)
         start = min(len(matched) * bs, (len(full) - 1) // bs * bs)
@@ -858,10 +944,7 @@ class Engine:
                     self.cache, work.slot, self.manager.tables[work.slot],
                     work.start + work.n_valid,
                 )
-            if self.sched.inflight is None:
-                # a boundary-packed successor may already have pinned its
-                # own prompt here — only clear when no prefill is live
-                self._inflight_tokens = None
+            self._end_prefill(work.slot)
             self._sample_prefill(req, work.slot, pre_logits)
 
     def _complete_chunk_async(self, work: PrefillChunk, advance: bool = True):
@@ -885,9 +968,7 @@ class Engine:
                     self.cache, work.slot, self.manager.tables[work.slot],
                     work.start + work.n_valid,
                 )
-            if self.sched.inflight is None:
-                # boundary-packed successor may have pinned its prompt
-                self._inflight_tokens = None
+            self._end_prefill(work.slot)
             req.admit_base = len(req.out_tokens)
             req.in_flight += 1
             self._eos_dev = paged_dev.set_stop_id(
@@ -895,20 +976,66 @@ class Engine:
             )
             self._record_first_token(req, work.slot)
 
+    def _end_prefill(self, slot: int) -> None:
+        """Release a completed prompt's per-slot prefill state (and its
+        staging lane, for the paged cache)."""
+        self._pf_tokens.pop(slot, None)
+        self._pf_prefix.pop(slot, None)
+        self._pf_lane.pop(slot, None)
+
     def _flush_chunk_blocks(self, work: PrefillChunk) -> None:
         if self.cache_kind != "paged":
             return
         bs = self.block_size
+        lane = self._pf_lane.get(work.slot, 0)
         end = work.start + work.n_valid
         for j in range(work.start // bs, (end - 1) // bs + 1):
-            if j < self._prefix_blocks:
+            if j < self._pf_prefix.get(work.slot, 0):
                 continue            # prefix-cache hit: already valid
             self.cache = paged_dev.write_prompt_block(
                 self.cache, self.staging, self.manager.blocks[work.slot][j],
-                j * bs,
+                j * bs, lane,
             )
 
     # ----------------------------------------------------- block management
+    def _apply_pool_directives(self) -> None:
+        """Drain the pool's pending device<->host copy directives into
+        actual device ops.  Must run after every manager/pool call that
+        can spill or re-hydrate, *before* any subsequent write could
+        clobber an involved block — device data-flow ordering then makes
+        the copy land ahead of later cache updates, because every op
+        threads ``self.cache``."""
+        for kind, a, b in self.pool.drain_directives():
+            if kind == "spill":
+                self.cache = paged_dev.spill_block(self.cache, a, b)
+                self.stats.spills += 1
+                self.tracer.on_spill(self.replica, self.stats.engine_steps, a, b)
+            else:
+                self.cache = paged_dev.rehydrate_block(self.cache, a, b)
+                self.stats.rehydrations += 1
+                self.tracer.on_rehydrate(self.replica, self.stats.engine_steps, a, b)
+
+    def _try_spill(self, alive) -> bool:
+        """Spill-before-evict: free one device block by moving the oldest
+        sequence's coldest hot block to the host tier.  The sequence
+        keeps decoding (hybrid hot/cold attention, LSE-merged) — no
+        re-prefill, unlike preemption.  Returns False when nothing can
+        spill (no qualifying block, or host tier saturated)."""
+        for s in sorted(alive, key=lambda x: self.manager.admit_seq[x]):
+            if self.slots[s] is None:
+                continue
+            if self.manager.spill_live_prefix(s, self._kv_len(s)):
+                self._apply_pool_directives()
+                self.cache = paged_dev.sync_slot(
+                    self.cache, s, self.manager.tables[s]
+                )
+                self.cache = paged_dev.sync_host_slot(
+                    self.cache, s, self.manager.host_tables[s],
+                    self.manager.cold_len(s),
+                )
+                return True
+        return False
+
     def _kv_len(self, slot: int) -> int:
         """KV positions held for ``slot`` (last sampled token not yet
         appended — it is this step's input).  Counts in-flight tokens:
@@ -923,6 +1050,7 @@ class Engine:
         req = self.slots[slot]
         self.slots[slot] = None
         self.manager.free_slot(slot)
+        self._apply_pool_directives()
         self.cache = paged_dev.sync_slot(
             self.cache, slot, self.manager.tables[slot], 0
         )
@@ -957,6 +1085,8 @@ class Engine:
                     slot, self._kv_len(slot)
                 )
                 if directive == "oom":
+                    if self.pool.host_blocks and self._try_spill(alive):
+                        continue    # freed a block without evicting anyone
                     victim = self.manager.youngest(alive)
                     self._observe_victim(victim)
                     if self.slots[victim] is None:
@@ -982,7 +1112,7 @@ class Engine:
     # ------------------------------------------- boundary packing (Sarathi-SC)
     def _chunk_arrays(self, work: PrefillChunk):
         chunk = np.zeros((1, work.bucket), np.int32)
-        chunk[0, :work.n_valid] = self._inflight_tokens[
+        chunk[0, :work.n_valid] = self._pf_tokens[work.slot][
             work.start:work.start + work.n_valid
         ]
         return jnp.asarray(chunk), np.int32(work.start), np.int32(work.n_valid)
@@ -993,14 +1123,15 @@ class Engine:
         begin the next queued prompt and pack its head chunk into the
         *same* dispatch (Sarathi-SC boundary packing — both chunks ride
         one weight stream via ``_fused2``/``_solo2``), so the token
-        budget stays full across prompt boundaries.  Dense cache only:
-        the paged staging cache has a single prefill lane, so a second
-        in-flight prompt cannot stage its chunk (ROADMAP follow-up).
+        budget stays full across prompt boundaries.  The paged cache
+        stages the newcomer's chunks in the second staging lane.
         ``taken`` is excluded from the slot choice — the finishing
         prompt claims it only after this dispatch completes."""
         sched = self.sched
         if budget <= 0 or sched.inflight is not None or not len(sched):
             return None
+        if self.cache_kind == "paged" and len(self._pf_lane) >= 2:
+            return None             # both staging lanes held
         free = [s for s in self._free_slots() if s != taken]
         if not free:
             return None
@@ -1013,7 +1144,15 @@ class Engine:
         self.tracer.on_admit(self.replica, req, self.stats.engine_steps,
                              slot, n_tokens=total,
                              refold=bool(req.out_tokens))
-        return sched.pack_boundary(budget)
+        work2 = sched.pack_boundary(budget)
+        if work2 is not None and self.cache_kind == "paged":
+            ok = self.manager.extend_chunked(
+                work2.slot, len(self._pf_tokens[work2.slot]),
+                work2.start + work2.n_valid, work2.last,
+            )
+            if not ok:
+                return None         # pool dry now: B's chunks run later
+        return work2
 
     def _exec_solo_sync(self, work: PrefillChunk):
         """Dispatch one chunk through the solo prefill program (sync
@@ -1021,7 +1160,8 @@ class Engine:
         chunk, off, nv = self._chunk_arrays(work)
         if self.cache_kind == "paged":
             pre_logits, self.staging = self._solo(
-                self.params, self.staging, chunk, np.int32(0), off, nv
+                self.params, self.staging, chunk,
+                np.int32(self._pf_lane.get(work.slot, 0)), off, nv
             )
         else:
             pre_logits, self.cache = self._solo(
@@ -1037,8 +1177,9 @@ class Engine:
         wslot = np.int32(work.slot)
         if self.cache_kind == "paged":
             self._tok_state, pre_tok, self.staging = self._solo(
-                self.params, self.staging, self._tok_state,
-                chunk, wslot, off, nv, rng, work.last,
+                self.params, self.staging, self._tok_state, chunk, wslot,
+                np.int32(self._pf_lane.get(work.slot, 0)), off, nv, rng,
+                work.last,
             )
         else:
             self._tok_state, pre_tok, self.cache = self._solo(
@@ -1064,6 +1205,9 @@ class Engine:
             kv_tokens=0,
             pool_util=(self.pool.utilization
                        if self.cache_kind == "paged" else None),
+            host_util=(self.pool.host_utilization
+                       if self.cache_kind == "paged" and self.host_blocks
+                       else None),
             pipeline_depth=len(self._pending),
             flops=flops, bytes=bytes_, oi=flops / max(bytes_, 1.0),
             wall=self.tracer.wall(),
@@ -1099,6 +1243,9 @@ class Engine:
             kv_tokens=kv,
             pool_util=(self.pool.utilization
                        if self.cache_kind == "paged" else None),
+            host_util=(self.pool.host_utilization
+                       if self.cache_kind == "paged" and self.host_blocks
+                       else None),
             pipeline_depth=len(self._pending),
             flops=flops, bytes=bytes_, oi=flops / max(bytes_, 1.0),
             wall=self.tracer.wall(),
@@ -1218,7 +1365,7 @@ class Engine:
         work = decision.prefill
         if work is not None and self.cache_kind == "paged":
             ok = self.manager.extend_chunked(
-                work.slot, len(self._inflight_tokens),
+                work.slot, len(self._pf_tokens[work.slot]),
                 work.start + work.n_valid, work.last,
             )
             if not ok:
@@ -1229,16 +1376,15 @@ class Engine:
         self.stats.engine_steps += 1
         self.stats.peak_active = max(self.stats.peak_active, len(active))
 
-        # Sarathi-SC boundary packing (dense): when `work` finishes its
-        # prompt, the next prompt begins *now* and its head chunk joins
-        # the same dispatch, filling the budget the small final chunk
-        # left unused.  A's chunk arrays are built before _begin_prefill
-        # repoints _inflight_tokens at B.
+        # Sarathi-SC boundary packing: when `work` finishes its prompt,
+        # the next prompt begins *now* and its head chunk joins the same
+        # dispatch, filling the budget the small final chunk left unused.
+        # A's chunk arrays are built before _begin_prefill pins B.
         work2 = None
         pre_advanced = False
         if work is not None:
             chunk, off, nv = self._chunk_arrays(work)
-            if work.last and self.cache_kind != "paged" and len(sched):
+            if work.last and len(sched):
                 sched.advance(work)     # A rides this dispatch regardless
                 pre_advanced = True
                 work2 = self._boundary_chunk(
@@ -1252,7 +1398,23 @@ class Engine:
             self.stats.boundary_packs += 1
             self.tracer.on_boundary_pack(self.replica, work2.req,
                                          self.stats.engine_steps, work2.slot)
-            if active:
+            if self.cache_kind == "paged":
+                laneA = np.int32(self._pf_lane.get(work.slot, 0))
+                laneB = np.int32(self._pf_lane.get(work2.slot, 0))
+                if active:
+                    (dec_logits, pre_logits, logits2,
+                     self.cache, self.staging) = self._fused2(
+                        self.params, self.cache, self.staging,
+                        self._decode_tokens(),
+                        chunk, laneA, off, nv, chunk2, laneB, off2, nv2,
+                    )
+                    self.stats.decode_steps += 1
+                else:
+                    pre_logits, logits2, self.staging = self._solo2(
+                        self.params, self.staging,
+                        chunk, laneA, off, nv, chunk2, laneB, off2, nv2,
+                    )
+            elif active:
                 dec_logits, pre_logits, logits2, self.cache = self._fused2(
                     self.params, self.cache, self._decode_tokens(),
                     chunk, np.int32(work.slot), off, nv,
@@ -1269,7 +1431,8 @@ class Engine:
             if self.cache_kind == "paged":
                 dec_logits, pre_logits, self.cache, self.staging = self._fused(
                     self.params, self.cache, self.staging,
-                    self._decode_tokens(), chunk, off, nv,
+                    self._decode_tokens(), chunk,
+                    np.int32(self._pf_lane.get(work.slot, 0)), off, nv,
                 )
             else:
                 dec_logits, pre_logits, self.cache = self._fused(
@@ -1322,7 +1485,7 @@ class Engine:
         work = decision.prefill
         if work is not None and self.cache_kind == "paged":
             ok = self.manager.extend_chunked(
-                work.slot, len(self._inflight_tokens),
+                work.slot, len(self._pf_tokens[work.slot]),
                 work.start + work.n_valid, work.last,
             )
             if not ok:
@@ -1342,7 +1505,8 @@ class Engine:
         if work is not None:
             chunk, off, nv = self._chunk_arrays(work)
             wslot = np.int32(work.slot)
-            if work.last and self.cache_kind != "paged" and len(sched):
+            lane = np.int32(self._pf_lane.get(work.slot, 0))
+            if work.last and len(sched):
                 sched.advance(work)
                 pre_advanced = True
                 work2 = self._boundary_chunk(
@@ -1351,13 +1515,32 @@ class Engine:
                 if work2 is not None:
                     chunk2, off2, nv2 = self._chunk_arrays(work2)
                     wslot2 = np.int32(work2.slot)
+                    lane2 = np.int32(self._pf_lane.get(work2.slot, 0))
 
         toks = eos = pre_tok = pre_tok2 = None
         if work2 is not None:
             self.stats.boundary_packs += 1
             self.tracer.on_boundary_pack(self.replica, work2.req,
                                          self.stats.engine_steps, work2.slot)
-            if active:
+            if self.cache_kind == "paged":
+                if active:
+                    (self._tok_state, toks, eos, pre_tok, pre_tok2,
+                     self.cache, self.staging) = self._fused2(
+                        self.params, self.cache, self.staging, self._tok_state,
+                        chunk, wslot, lane, off, nv,
+                        chunk2, wslot2, lane2, off2, nv2,
+                        rng, self._eos_dev, work2.last,
+                    )
+                    self.stats.decode_steps += 1
+                else:
+                    (self._tok_state, pre_tok, pre_tok2,
+                     self.staging) = self._solo2(
+                        self.params, self.staging, self._tok_state,
+                        chunk, wslot, lane, off, nv,
+                        chunk2, wslot2, lane2, off2, nv2,
+                        rng, work2.last,
+                    )
+            elif active:
                 (self._tok_state, toks, eos, pre_tok, pre_tok2,
                  self.cache) = self._fused2(
                     self.params, self.cache, self._tok_state,
@@ -1376,7 +1559,7 @@ class Engine:
                 (self._tok_state, toks, eos, pre_tok,
                  self.cache, self.staging) = self._fused(
                     self.params, self.cache, self.staging, self._tok_state,
-                    chunk, wslot, off, nv, rng, self._eos_dev, work.last,
+                    chunk, wslot, lane, off, nv, rng, self._eos_dev, work.last,
                 )
             else:
                 self._tok_state, toks, eos, pre_tok, self.cache = self._fused(

@@ -19,6 +19,26 @@ Conventions
   sequence appends to them in place (contents diverge from the key).
 * Shared blocks are copy-on-write: the *appending* sequence copies, the
   remaining owners keep the original (see ``PagedCacheManager``).
+
+Host tier (``host_blocks > 0``)
+-------------------------------
+A second, host-memory pool of the same block granularity (host id 0 is
+again the null block).  Two flows feed it:
+
+* **free-time spill** — when a hash-registered device block's refcount
+  hits 0, its contents spill to a host block instead of vanishing: the
+  prefix stays re-hydratable (a later identical prompt copies it back
+  device-ward instead of recomputing the prefill).  Host capacity is a
+  victim cache: unreferenced host blocks are LRU-evicted to make room.
+* **live spill** — ``PagedCacheManager.spill_live_prefix`` moves a live
+  sequence's cold leading blocks host-ward under pool pressure
+  (spill-before-evict), ref-holding the host block until the slot frees.
+
+The pool never touches device arrays: every spill/rehydrate decision is
+emitted as a ``("spill", dev, host)`` / ``("rehydrate", host, dev)``
+directive on :attr:`directives`; the engine drains them into the actual
+device<->host block copies (``serving/paged/device.py``) before any
+subsequent pool write can clobber the source.
 """
 from __future__ import annotations
 
@@ -34,10 +54,14 @@ class PoolStats:
     cow_copies: int = 0      # copy-on-write block duplications
     preemptions: int = 0     # sequences evicted for block pressure
     peak_in_use: int = 0
+    spills: int = 0          # device blocks copied host-ward (both flows)
+    rehydrates: int = 0      # host blocks copied back device-ward
+    host_evictions: int = 0  # cold host blocks dropped for host pressure
+    host_peak_in_use: int = 0
 
 
 class BlockPool:
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int, host_blocks: int = 0):
         if n_blocks < 2:
             raise ValueError(f"need >= 2 blocks (1 usable + null), got {n_blocks}")
         self.n_blocks = n_blocks
@@ -48,6 +72,14 @@ class BlockPool:
         self._key_to_block: dict[Hashable, int] = {}
         self._block_to_key: dict[int, Hashable] = {}
         self.stats = PoolStats()
+        # ------------------------------------------------------- host tier
+        self.host_blocks = host_blocks
+        self._host_free = list(range(host_blocks, 0, -1))
+        self._host_ref: dict[int, int] = {}
+        self._key_to_host: dict[Hashable, int] = {}
+        self._host_to_key: dict[int, Hashable] = {}
+        self._host_lru: list[int] = []       # unreferenced host blocks, oldest first
+        self.directives: list[tuple] = []    # pending device<->host copies
 
     # ------------------------------------------------------------- capacity
     @property
@@ -86,6 +118,16 @@ class BlockPool:
         self._ref[block] -= 1
         if self._ref[block] == 0:
             del self._ref[block]
+            key = self._block_to_key.get(block)
+            if (self.host_blocks and key is not None
+                    and key not in self._key_to_host):
+                # free-time spill: keep the dying prefix re-hydratable
+                hb = self._host_reserve()
+                if hb is not None:
+                    self.directives.append(("spill", block, hb))
+                    self.host_register(key, hb)
+                    self._host_lru.append(hb)
+                    self.stats.spills += 1
             self.invalidate(block)
             self._free.append(block)
             self.stats.frees += 1
@@ -116,6 +158,88 @@ class BlockPool:
         key = self._block_to_key.pop(block, None)
         if key is not None:
             self._key_to_block.pop(key, None)
+
+    # ------------------------------------------------------------ host tier
+    @property
+    def host_in_use(self) -> int:
+        return self.host_blocks - len(self._host_free)
+
+    @property
+    def host_utilization(self) -> float:
+        return self.host_in_use / max(self.host_blocks, 1)
+
+    def _host_reserve(self) -> int | None:
+        """Take a host block id, LRU-evicting an unreferenced cold host
+        block under pressure.  None when every host block is ref-held."""
+        if not self._host_free:
+            if not self._host_lru:
+                return None
+            victim = self._host_lru.pop(0)
+            self.host_invalidate(victim)
+            self._host_free.append(victim)
+            self.stats.host_evictions += 1
+        hb = self._host_free.pop()
+        self.stats.host_peak_in_use = max(
+            self.stats.host_peak_in_use, self.host_in_use
+        )
+        return hb
+
+    def host_alloc(self) -> int | None:
+        """Take a ref-held host block (live spill).  None when the host
+        tier is saturated with ref-held blocks."""
+        hb = self._host_reserve()
+        if hb is not None:
+            self._host_ref[hb] = 1
+        return hb
+
+    def host_refcount(self, hb: int) -> int:
+        return self._host_ref.get(hb, 0)
+
+    def host_incref(self, hb: int) -> None:
+        # a cold (unreferenced) host block becoming ref-held leaves the
+        # LRU eviction candidate list
+        if self._host_ref.get(hb, 0) == 0 and hb in self._host_lru:
+            self._host_lru.remove(hb)
+        self._host_ref[hb] = self._host_ref.get(hb, 0) + 1
+
+    def host_decref(self, hb: int) -> None:
+        self._host_ref[hb] -= 1
+        if self._host_ref[hb] == 0:
+            del self._host_ref[hb]
+            if hb in self._host_to_key:
+                # registered prefix: keep as an evictable cold cache entry
+                self._host_lru.append(hb)
+            else:
+                self._host_free.append(hb)
+
+    def host_lookup(self, key: Hashable) -> int | None:
+        hb = self._key_to_host.get(key)
+        if hb is not None:
+            self.stats.hash_hits += 1
+        return hb
+
+    def host_peek(self, key: Hashable) -> int | None:
+        """Stat-free :meth:`host_lookup` for read-only probes."""
+        return self._key_to_host.get(key)
+
+    def host_register(self, key: Hashable, hb: int) -> None:
+        old = self._key_to_host.get(key)
+        if old is not None:
+            self._host_to_key.pop(old, None)
+        self._key_to_host[key] = hb
+        self._host_to_key[hb] = key
+
+    def host_invalidate(self, hb: int) -> None:
+        key = self._host_to_key.pop(hb, None)
+        if key is not None:
+            self._key_to_host.pop(key, None)
+
+    def drain_directives(self) -> list[tuple]:
+        """Hand the pending device<->host copy directives to the engine
+        (cleared here; the engine must apply them before the next write
+        to any involved device block)."""
+        out, self.directives = self.directives, []
+        return out
 
 
 def chain_key(prev: Hashable, block_tokens: tuple[int, ...]) -> Hashable:

@@ -41,60 +41,164 @@ def _copy_block(pool: jax.Array, src, dst) -> jax.Array:
 
 
 @_donate0
-def _write_block(pool: jax.Array, sub: jax.Array, phys, start) -> jax.Array:
-    """Copy ``sub[:, 0, start:start+block_size]`` into pool block ``phys``.
+def _write_block(pool: jax.Array, sub: jax.Array, phys, start, lane) -> jax.Array:
+    """Copy ``sub[:, lane, start:start+block_size]`` into pool block
+    ``phys``.
 
-    The prefill sub-cache is sequence-major (L, 1, S, Hkv, Dh); one
+    The prefill sub-cache is sequence-major (L, lanes, S, Hkv, Dh); one
     block's worth is transposed to the pool's heads-major layout here —
     a (block_size, Hkv) tile per layer, negligible next to the pool.
+    ``lane`` is a traced scalar: boundary packing runs two prefills in
+    the same staging cache and drains either lane without recompiling.
     """
     bs = pool.shape[3]
-    blk = jax.lax.dynamic_slice_in_dim(sub[:, 0], start, bs, axis=1)
+    blk = jax.lax.dynamic_slice_in_dim(sub[:, lane], start, bs, axis=1)
     blk = jnp.swapaxes(blk, 1, 2)                 # (L, Hkv, bs, Dh)
     return jax.lax.dynamic_update_slice(
         pool, blk[:, None].astype(pool.dtype), (0, phys, 0, 0, 0)
     )
 
 
+@functools.partial(
+    jax.jit, donate_argnums=(0, 1), static_argnames=("kv_dtype",)
+)
+def _write_block_q(
+    pool: jax.Array, spool: jax.Array, sub: jax.Array, phys, start, lane,
+    *, kv_dtype: str,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantizing :func:`_write_block`: the bf16 staging tile quantizes
+    per (head, position) vector on the way into the pool; the scale pool
+    gets the matching (L, Hkv, bs) tile."""
+    from repro.kernels import ref
+
+    bs = pool.shape[3]
+    blk = jax.lax.dynamic_slice_in_dim(sub[:, lane], start, bs, axis=1)
+    blk = jnp.swapaxes(blk, 1, 2)                 # (L, Hkv, bs, Dh)
+    payload, scale = ref.kv_quantize(blk, kv_dtype)
+    pool = jax.lax.dynamic_update_slice(pool, payload[:, None], (0, phys, 0, 0, 0))
+    spool = jax.lax.dynamic_update_slice(spool, scale[:, None], (0, phys, 0, 0))
+    return pool, spool
+
+
 def copy_block(cache: Pytree, src: int, dst: int) -> Pytree:
-    """COW: duplicate physical block ``src`` into ``dst`` (k and v)."""
-    return {
+    """COW: duplicate physical block ``src`` into ``dst`` (k and v, and
+    their scale blocks when the pool is quantized)."""
+    out = {
         **cache,
         "k": _copy_block(cache["k"], src, dst),
         "v": _copy_block(cache["v"], src, dst),
     }
+    if "k_scale" in cache:
+        out["k_scale"] = _copy_block(cache["k_scale"], src, dst)
+        out["v_scale"] = _copy_block(cache["v_scale"], src, dst)
+    return out
 
 
-def write_prompt_block(cache: Pytree, sub_cache: Pytree, phys: int, start: int) -> Pytree:
+def write_prompt_block(
+    cache: Pytree, sub_cache: Pytree, phys: int, start: int, lane: int = 0,
+) -> Pytree:
     """Scatter prompt KV positions ``[start, start+block_size)`` from a
-    prefill sub-cache (batch 1, seq padded to a block multiple) into
-    physical block ``phys``."""
+    prefill staging lane (seq padded to a block multiple) into physical
+    block ``phys`` — quantizing on the way in when the pool is int8/fp8
+    (the staging cache always holds full-precision KV)."""
+    if "k_scale" in cache:
+        kv_dtype = "int8" if cache["k"].dtype == jnp.int8 else "fp8"
+        k, ks = _write_block_q(
+            cache["k"], cache["k_scale"], sub_cache["k"], phys, start, lane,
+            kv_dtype=kv_dtype,
+        )
+        v, vs = _write_block_q(
+            cache["v"], cache["v_scale"], sub_cache["v"], phys, start, lane,
+            kv_dtype=kv_dtype,
+        )
+        return {**cache, "k": k, "v": v, "k_scale": ks, "v_scale": vs}
     return {
         **cache,
-        "k": _write_block(cache["k"], sub_cache["k"], phys, start),
-        "v": _write_block(cache["v"], sub_cache["v"], phys, start),
+        "k": _write_block(cache["k"], sub_cache["k"], phys, start, lane),
+        "v": _write_block(cache["v"], sub_cache["v"], phys, start, lane),
     }
 
 
 @_donate0
-def _read_block(sub: jax.Array, pool: jax.Array, phys, start) -> jax.Array:
-    """Inverse of ``_write_block``: copy pool block ``phys`` into the
-    sequence-major staging cache at positions [start, start+block_size)."""
+def _read_block(sub: jax.Array, pool: jax.Array, phys, start, lane) -> jax.Array:
+    """Inverse of ``_write_block``: copy pool block ``phys`` into staging
+    lane ``lane`` at positions [start, start+block_size)."""
     blk = jnp.swapaxes(pool[:, phys], 1, 2)[:, None]   # (L, 1, bs, Hkv, Dh)
     return jax.lax.dynamic_update_slice(
-        sub, blk.astype(sub.dtype), (0, 0, start, 0, 0)
+        sub, blk.astype(sub.dtype), (0, lane, start, 0, 0)
     )
 
 
-def read_block(sub_cache: Pytree, cache: Pytree, phys: int, start: int) -> Pytree:
-    """Hydrate a prefill staging cache from a prefix-cache-hit block, so
+@_donate0
+def _read_block_q(
+    sub: jax.Array, pool: jax.Array, spool: jax.Array, phys, start, lane,
+) -> jax.Array:
+    """Dequantizing :func:`_read_block` for int8/fp8 pools."""
+    from repro.kernels import ref
+
+    blk = ref.kv_dequantize(pool[:, phys], spool[:, phys], sub.dtype)
+    blk = jnp.swapaxes(blk, 1, 2)[:, None]             # (L, 1, bs, Hkv, Dh)
+    return jax.lax.dynamic_update_slice(sub, blk, (0, lane, start, 0, 0))
+
+
+def read_block(
+    sub_cache: Pytree, cache: Pytree, phys: int, start: int, lane: int = 0,
+) -> Pytree:
+    """Hydrate a prefill staging lane from a prefix-cache-hit block, so
     chunked-prefill attention sees the shared prefix's K/V without
-    recomputing it."""
+    recomputing it.  Quantized pools dequantize on the way out (staging
+    stays full precision)."""
+    if "k_scale" in cache:
+        return {
+            **sub_cache,
+            "k": _read_block_q(
+                sub_cache["k"], cache["k"], cache["k_scale"], phys, start, lane
+            ),
+            "v": _read_block_q(
+                sub_cache["v"], cache["v"], cache["v_scale"], phys, start, lane
+            ),
+        }
     return {
         **sub_cache,
-        "k": _read_block(sub_cache["k"], cache["k"], phys, start),
-        "v": _read_block(sub_cache["v"], cache["v"], phys, start),
+        "k": _read_block(sub_cache["k"], cache["k"], phys, start, lane),
+        "v": _read_block(sub_cache["v"], cache["v"], phys, start, lane),
     }
+
+
+@_donate0
+def _xfer_block(dst_pool: jax.Array, src_pool: jax.Array, src, dst) -> jax.Array:
+    """Copy one block between two pools with the same trailing layout
+    (device<->host spill traffic; payloads move in storage dtype, so a
+    quantized block spills quantized — 1 byte/elem over the slow link)."""
+    return dst_pool.at[:, dst].set(src_pool[:, src].astype(dst_pool.dtype))
+
+
+def spill_block(cache: Pytree, dev: int, host: int) -> Pytree:
+    """Apply a ``("spill", dev, host)`` directive: copy device block
+    ``dev`` into host-tier block ``host`` (k, v, and scales)."""
+    out = {
+        **cache,
+        "host_k": _xfer_block(cache["host_k"], cache["k"], dev, host),
+        "host_v": _xfer_block(cache["host_v"], cache["v"], dev, host),
+    }
+    if "k_scale" in cache:
+        out["host_k_scale"] = _xfer_block(cache["host_k_scale"], cache["k_scale"], dev, host)
+        out["host_v_scale"] = _xfer_block(cache["host_v_scale"], cache["v_scale"], dev, host)
+    return out
+
+
+def rehydrate_block(cache: Pytree, host: int, dev: int) -> Pytree:
+    """Apply a ``("rehydrate", host, dev)`` directive: copy host-tier
+    block ``host`` back into device block ``dev``."""
+    out = {
+        **cache,
+        "k": _xfer_block(cache["k"], cache["host_k"], host, dev),
+        "v": _xfer_block(cache["v"], cache["host_v"], host, dev),
+    }
+    if "k_scale" in cache:
+        out["k_scale"] = _xfer_block(cache["k_scale"], cache["host_k_scale"], host, dev)
+        out["v_scale"] = _xfer_block(cache["v_scale"], cache["host_v_scale"], host, dev)
+    return out
 
 
 @_donate0
@@ -137,4 +241,17 @@ def sync_slot(cache: Pytree, slot: int, row, length: int | None = None) -> Pytre
     }
     if length is not None:
         out["lengths"] = out["lengths"].at[slot].set(jnp.int32(length))
+    return out
+
+
+def sync_host_slot(cache: Pytree, slot: int, row, cold_len: int) -> Pytree:
+    """Push one slot's host block-table row and cold-prefix length (the
+    hot attention window's start) to the device cache."""
+    out = {
+        **cache,
+        "host_tables": _set_row(
+            cache["host_tables"], slot, jnp.asarray(row, jnp.int32)
+        ),
+    }
+    out["cold_lengths"] = _set_scalar(out["cold_lengths"], slot, jnp.int32(cold_len))
     return out

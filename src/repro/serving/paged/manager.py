@@ -12,6 +12,16 @@ the rest are freshly allocated and must be filled from the prefill
 pass.  Decode-time appends (``ensure_append``) allocate a block at each
 block boundary and copy-on-write a shared tail on the first divergent
 append.
+
+With a host tier (``pool.host_blocks > 0``) the matching walks extend to
+the pool's *host* prefix hash: a host-resident block re-hydrates into a
+fresh device block (a ``("rehydrate", host, dev)`` directive the engine
+turns into a device copy) and counts as cached — the prefill compute is
+saved even though the device block is new.  Under pool pressure
+:meth:`spill_live_prefix` moves a live slot's cold leading blocks the
+other way (spill-before-evict): the slot keeps decoding hybrid —
+device kernel over its hot window, host path over the spilled prefix —
+instead of being preempted and re-prefilled.
 """
 from __future__ import annotations
 
@@ -33,41 +43,65 @@ class PagedCacheManager:
         self._counter = 0
         # prompt-wide key chain for a chunked admission in progress
         self._chunk_keys: dict[int, list] = {}
+        # host tier: per-slot cold prefix (leading blocks live-spilled to
+        # host memory).  host_tables[s, :cold] holds the host block ids;
+        # blocks[s][j] == 0 marks a cold position; host_ids[s] are the
+        # ref-held host blocks to release at teardown.
+        self.host_tables = np.zeros((n_slots, max_blocks), np.int32)
+        self.host_ids: list[list[int]] = [[] for _ in range(n_slots)]
+        self.cold_blocks = [0] * n_slots
+
+    def cold_len(self, slot: int) -> int:
+        """Tokens of ``slot``'s prefix resident on the host tier (the hot
+        attention window starts here)."""
+        return self.cold_blocks[slot] * self.pool.block_size
 
     # ------------------------------------------------------------ admission
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.pool.block_size)
 
     # ------------------------------------------------------ read-only probes
-    def probe_prefix(self, tokens: np.ndarray) -> int:
-        """Longest prefix of ``tokens`` already resident in the pool's
-        prefix hash, in tokens.  Side-effect free: no increfs, no
-        allocation, no stats — the cluster router calls this on every
-        replica per request to score prefix affinity, and a probe must
-        not perturb the replica it does not choose."""
+    def _probe_walk(self, tokens: np.ndarray) -> tuple[int, int]:
+        """Stat-free matching walk: ``(device_hits, total_hits)`` in
+        blocks, where total includes host-tier hits (re-hydratable: the
+        prefill compute is saved, but a fresh device block is still
+        consumed)."""
         bs = self.pool.block_size
         need = self.blocks_for(len(tokens))
-        key, hit = None, 0
+        key, dev, total = None, 0, 0
         for j in range(need):
             key = chain_key(key, tuple(int(t) for t in tokens[j * bs:(j + 1) * bs]))
-            if self.pool.peek(key) is None:
+            if self.pool.peek(key) is not None:
+                dev += 1
+                total += 1
+            elif self.pool.host_blocks and self.pool.host_peek(key) is not None:
+                total += 1
+            else:
                 break
-            hit = min(len(tokens), (j + 1) * bs)
-        return hit
+        return dev, total
+
+    def probe_prefix(self, tokens: np.ndarray) -> int:
+        """Longest prefix of ``tokens`` already resident in the pool's
+        prefix hash (either tier), in tokens.  Side-effect free: no
+        increfs, no allocation, no stats — the cluster router calls this
+        on every replica per request to score prefix affinity, and a
+        probe must not perturb the replica it does not choose."""
+        _, total = self._probe_walk(tokens)
+        return min(len(tokens), total * self.pool.block_size)
 
     def admit_shortfall(self, tokens: np.ndarray) -> int:
         """Fresh blocks an admission of ``tokens`` would allocate right
-        now: total blocks minus resident prefix hits, plus the decode
-        boundary headroom block when the prompt exactly fills its blocks.
-        Read-only (mirrors :meth:`try_admit`'s capacity check without
-        mutating anything) — the admission probe behind
-        ``Engine.can_admit``."""
+        now: total blocks minus *device*-resident prefix hits (a host hit
+        saves the prefill but still needs a device block to re-hydrate
+        into), plus the decode boundary headroom block when the prompt
+        exactly fills its blocks.  Read-only (mirrors :meth:`try_admit`'s
+        capacity check without mutating anything) — the admission probe
+        behind ``Engine.can_admit``."""
         bs = self.pool.block_size
         need = self.blocks_for(len(tokens))
-        hit = self.probe_prefix(tokens)
-        matched = need if hit >= len(tokens) else hit // bs
+        dev, _ = self._probe_walk(tokens)
         headroom = 1 if (len(tokens) % bs == 0 and need < self.max_blocks) else 0
-        return need - matched + headroom
+        return need - dev + headroom
 
     def try_admit(self, slot: int, tokens: np.ndarray):
         """Reserve blocks for ``tokens`` in ``slot``.
@@ -83,28 +117,43 @@ class PagedCacheManager:
             raise ValueError(f"{len(tokens)} tokens > {self.max_blocks} blocks/seq")
         toks = [tuple(int(t) for t in tokens[j * bs:(j + 1) * bs]) for j in range(need)]
 
-        matched: list[tuple[int, object]] = []
+        # matched walk over both tiers: (key, device block | None, host
+        # block | None).  A host hit re-hydrates into a fresh device
+        # block, so only device hits reduce the fresh-block bill.
+        matched: list[tuple[object, int | None, int | None]] = []
         key = None
         for j in range(need):
             key = chain_key(key, toks[j])
             b = self.pool.lookup(key)
-            if b is None:
+            if b is not None:
+                matched.append((key, b, None))
+                continue
+            hb = self.pool.host_lookup(key) if self.pool.host_blocks else None
+            if hb is None:
                 break
-            matched.append((b, key))
+            matched.append((key, None, hb))
+        n_dev = sum(1 for _, b, _ in matched if b is not None)
         # when the prompt exactly fills its blocks the very first decode
         # append needs a fresh block — reserve it now (not merely check),
         # or a later admission can consume it and the new sequence gets
         # preempted in the same step its prefill just ran
         headroom = 1 if (len(tokens) % bs == 0 and need < self.max_blocks) else 0
-        if need - len(matched) + headroom > self.pool.free_count:
+        if need - n_dev + headroom > self.pool.free_count:
             return None
 
         ids, keys = [], []
-        for b, k in matched:
-            self.pool.incref(b)
+        for k, b, hb in matched:
+            if b is not None:
+                self.pool.incref(b)
+            else:
+                # re-hydrate: fresh device block, KV copied back from host
+                b = self.pool.alloc()
+                self.pool.directives.append(("rehydrate", hb, b))
+                self.pool.register(k, b)
+                self.pool.stats.rehydrates += 1
             ids.append(b)
             keys.append(k)
-        key = matched[-1][1] if matched else None
+        key = matched[-1][0] if matched else None
         for j in range(len(matched), need):
             key = chain_key(key, toks[j])
             b = self.pool.alloc()
@@ -148,11 +197,20 @@ class PagedCacheManager:
         matched: list[int] = []
         for j in range(need):
             b = self.pool.lookup(chain[j])
-            if b is None:
-                break
+            if b is not None:
+                self.pool.incref(b)
+            else:
+                # host-tier hit: re-hydrate when a free device block is
+                # available now; otherwise stop the walk (shorter prefix
+                # hit — begin_chunked must stay unable to fail)
+                hb = self.pool.host_lookup(chain[j]) if self.pool.host_blocks else None
+                if hb is None or self.pool.free_count == 0:
+                    break
+                b = self.pool.alloc()   # refcount 1, no incref needed
+                self.pool.directives.append(("rehydrate", hb, b))
+                self.pool.register(chain[j], b)
+                self.pool.stats.rehydrates += 1
             matched.append(b)
-        for b in matched:
-            self.pool.incref(b)
 
         self.blocks[slot] = list(matched)
         self.keys[slot] = chain[:len(matched)]
@@ -194,6 +252,47 @@ class PagedCacheManager:
             self.tables[slot, len(self.blocks[slot]) - 1] = b
         if final:
             self._chunk_keys.pop(slot, None)
+        return True
+
+    # ------------------------------------------------------------ live spill
+    def spill_live_prefix(self, slot: int, length: int) -> bool:
+        """Spill ``slot``'s oldest hot block to the host tier, freeing one
+        device block without preempting the sequence (spill-before-evict).
+
+        ``length`` is the slot's current KV length.  Only a *full* block
+        strictly below the append block qualifies (the hot attention
+        window must keep covering the append position), and only a
+        privately-owned one (a shared block is attended hot by its other
+        owners, who cannot follow it to the host tier).  Returns False
+        when no block qualifies or the host tier is saturated — the
+        caller falls back to preemption.
+        """
+        bs = self.pool.block_size
+        j = self.cold_blocks[slot]
+        if j >= length // bs or j >= len(self.blocks[slot]):
+            return False
+        b = self.blocks[slot][j]
+        if self.pool.refcount(b) != 1:
+            return False
+        hb = self.pool.host_alloc()
+        if hb is None:
+            return False
+        key = self.keys[slot][j]
+        self.pool.directives.append(("spill", b, hb))
+        if key is not None and self.pool.host_peek(key) is None:
+            # the prefix stays matchable for future prompts, now host-side
+            self.pool.host_register(key, hb)
+        # drop the device hash entry *before* decref so the free path
+        # does not auto-spill a second copy
+        self.pool.invalidate(b)
+        self.pool.decref(b)   # privately owned: frees the device block
+        self.pool.stats.spills += 1
+        self.blocks[slot][j] = 0
+        self.keys[slot][j] = None
+        self.tables[slot, j] = 0
+        self.host_tables[slot, j] = hb
+        self.host_ids[slot].append(hb)
+        self.cold_blocks[slot] = j + 1
         return True
 
     # --------------------------------------------------------------- decode
@@ -243,12 +342,20 @@ class PagedCacheManager:
     # ------------------------------------------------------------- teardown
     def free_slot(self, slot: int) -> None:
         for b in self.blocks[slot]:
-            self.pool.decref(b)
+            if b:   # 0 marks a live-spilled (cold) position
+                self.pool.decref(b)
+        for hb in self.host_ids[slot]:
+            # registered host blocks demote to the evictable cold cache;
+            # unregistered duplicates free outright
+            self.pool.host_decref(hb)
         self.blocks[slot] = []
         self.keys[slot] = []
         self.tables[slot, :] = 0
         self.admit_seq[slot] = -1
         self._chunk_keys.pop(slot, None)
+        self.host_tables[slot, :] = 0
+        self.host_ids[slot] = []
+        self.cold_blocks[slot] = 0
 
     def youngest(self, slots) -> int:
         return max(slots, key=lambda s: self.admit_seq[s])

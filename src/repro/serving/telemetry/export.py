@@ -122,6 +122,8 @@ def to_chrome_trace(tracer: Tracer) -> dict:
                     "pipeline_depth": rec.pipeline_depth}
         if rec.pool_util is not None:
             counters["pool_util"] = rec.pool_util
+        if rec.host_util is not None:
+            counters["host_util"] = rec.host_util
         for cname, val in counters.items():
             events.append({
                 "name": cname, "ph": "C", "pid": rec.replica, "tid": 0,

@@ -126,6 +126,7 @@ class MetricsRegistry:
 _ENGINE_COUNTERS = (
     "prefills", "prefill_chunks", "boundary_packs", "decode_steps",
     "engine_steps", "generated", "preemptions", "victim_drains",
+    "spills", "rehydrations",
 )
 
 
@@ -141,9 +142,11 @@ def engine_registry(stats, pool_stats=None) -> MetricsRegistry:
     reg.histogram("ttft_steps").extend(stats.ttft_samples)
     reg.histogram("per_token_steps").extend(stats.per_token_samples)
     if pool_stats is not None:
-        for name in ("allocs", "frees", "hash_hits", "cow_copies"):
+        for name in ("allocs", "frees", "hash_hits", "cow_copies",
+                     "spills", "rehydrates", "host_evictions"):
             reg.counter(f"pool_{name}").inc(getattr(pool_stats, name))
         reg.gauge("pool_peak_in_use").set(pool_stats.peak_in_use)
+        reg.gauge("pool_host_peak_in_use").set(pool_stats.host_peak_in_use)
     return reg
 
 
@@ -156,6 +159,8 @@ def cluster_registry(cstats) -> MetricsRegistry:
     reg.counter("generated").inc(cstats.generated)
     reg.counter("preemptions").inc(cstats.preemptions)
     reg.counter("spills").inc(cstats.spills)
+    reg.counter("kv_spills").inc(cstats.kv_spills)
+    reg.counter("kv_rehydrations").inc(cstats.kv_rehydrations)
     reg.counter("prefix_hit_tokens").inc(cstats.prefix_hit_tokens)
     reg.counter("probed_tokens").inc(cstats.probed_tokens)
     reg.gauge("tokens_per_round").set(cstats.tokens_per_round)

@@ -42,6 +42,7 @@ class StepRecord:
     flops: float                # analytic FLOPs for this dispatch
     bytes: float                # analytic HBM bytes for this dispatch
     oi: float                   # operational intensity = flops / bytes
+    host_util: float | None = None  # host KV tier utilization (None: no tier)
     wall: float | None = None   # perf_counter at dispatch (Tracer(wall=True))
 
     def as_dict(self) -> dict:

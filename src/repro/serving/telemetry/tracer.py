@@ -121,6 +121,12 @@ class NullTracer:
     def on_boundary_pack(self, replica, req, step, slot):
         pass
 
+    def on_spill(self, replica, step, dev_block, host_block):
+        pass
+
+    def on_rehydrate(self, replica, step, host_block, dev_block):
+        pass
+
     def on_step(self, record):
         pass
 
@@ -250,6 +256,20 @@ class Tracer:
     def on_boundary_pack(self, replica: int, req, step: int, slot: int) -> None:
         self._event(replica, slot, req.uid, "boundary_packed", step,
                     slot=slot)
+
+    # ------------------------------------------------------------ KV tiering
+    def on_spill(self, replica: int, step: int, dev_block: int,
+                 host_block: int) -> None:
+        """One KV block copied device -> host tier (free-time or live
+        spill).  Not tied to a request: stamped on the steps track."""
+        self._event(replica, TRACK_STEPS, -1, "kv_spill", step,
+                    dev=dev_block, host=host_block)
+
+    def on_rehydrate(self, replica: int, step: int, host_block: int,
+                     dev_block: int) -> None:
+        """One KV block copied host tier -> device (prefix re-hydration)."""
+        self._event(replica, TRACK_STEPS, -1, "kv_rehydrate", step,
+                    host=host_block, dev=dev_block)
 
     # ------------------------------------------------------------- timeline
     def on_step(self, record) -> None:
