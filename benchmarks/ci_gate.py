@@ -20,6 +20,9 @@ them against the committed ``benchmarks/baseline.json``:
 * ``cluster_speedup_2r`` / ``affinity_hit_rate`` — cluster tokens/round
   scaling at 2 replicas over 1, and the prefix-affinity router's
   resident-prefix hit-rate (both counted in deterministic rounds/tokens);
+* ``disagg_ttft_gain`` — mixed over prefill/decode-disaggregated mean
+  end-to-end TTFT in cluster rounds at equal capacity (deterministic
+  round counting; must stay >= 1, i.e. disaggregation never hurts);
 * ``kernel_decode_err`` — the decode-attention kernel smoke row's max
   abs err vs the jnp oracle, with an 8x band: only a genuine numeric
   divergence (a real kernel bug is many orders of magnitude) trips it.
@@ -73,6 +76,7 @@ GATED = {
     "fp8_batch_gain": ("higher", 1.0),
     "cluster_speedup_2r": ("higher", 1.0),
     "affinity_hit_rate": ("higher", 1.0),
+    "disagg_ttft_gain": ("higher", 1.0),
     "kernel_decode_err": ("lower", 8.0),
 }
 

@@ -19,9 +19,22 @@ one router.  Two sections:
   TTFT in engine steps (prefix-hit chunks are skipped by the chunked
   prefill, so affinity cuts prefill work, not just allocator churn).
 
+* **disaggregated compare** — the same paced arrival stream served by an
+  all-``mixed`` cluster and by a prefill/decode split (equal total slot
+  count and equal per-replica token budget, so capacity is identical and
+  only the *layout* differs).  Under a tight token budget a mixed
+  replica's resident decodes shrink its prefill chunks (prefill/decode
+  interference), while a prefill-role replica — whose sequences migrate
+  to a decode replica the round their last chunk completes — prefills at
+  the full budget every round.  Reports and gates ``disagg_ttft_gain`` —
+  mixed over disaggregated mean *end-to-end* TTFT in cluster rounds
+  (submit round to first-token round, which includes the global queue
+  wait) — and asserts the disaggregated layout is no slower.
+
 ``main`` returns a metrics dict consumed by ``benchmarks/ci_gate.py``:
-``cluster_speedup_2r`` (tokens/round at 2 replicas over 1) and the two
-hit-rates.  ``--smoke`` runs the down-sized CI workload.
+``cluster_speedup_2r`` (tokens/round at 2 replicas over 1), the two
+hit-rates, and ``disagg_ttft_gain``.  ``--smoke`` runs the down-sized
+CI workload (1P+1D vs 2 mixed; the full run compares 2P+2D vs 4 mixed).
 """
 from __future__ import annotations
 
@@ -143,12 +156,90 @@ def affinity_compare(model, params, print_fn=print, smoke: bool = False) -> dict
     }
 
 
+def _serve_paced(model, params, prompts, n_replicas, gap, max_new, **kw):
+    """Open-loop arrival stream: one request submitted every ``gap``
+    cluster rounds (steady-state serving, not a batch drain — the regime
+    where layout, not aggregate capacity, decides TTFT)."""
+    cl = Cluster(model, params, n_replicas, route="round_robin", **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    it = iter(reqs)
+    pending = next(it)
+    while pending is not None:
+        if cl.rounds % gap == 0:
+            cl.submit(pending)
+            pending = next(it, None)
+        cl.step()
+    stats = cl.run()
+    return reqs, stats
+
+
+def disagg_compare(model, params, print_fn=print, smoke: bool = False) -> dict:
+    """Mixed vs prefill/decode-disaggregated layout at equal per-replica
+    slots and equal per-replica token budget, under a paced arrival
+    stream.
+
+    The mechanism being measured is prefill/decode *interference*: with
+    ``token_budget=16`` (= one prefill chunk), a mixed replica's resident
+    decodes eat into the chunk budget, and the block-boundary clip drops
+    its prefill rate to 8 tokens/round whenever any decode is resident —
+    while a prefill-role replica (its decodes migrate away every round)
+    prefills at the full 16.  Faster prefill is directly lower TTFT; the
+    disaggregated layout buys it by giving decodes a dedicated home.
+    Slots: mixed runs 4/replica; disagg runs 2 on prefill replicas and 6
+    on decode replicas — same cluster total.
+    """
+    n_replicas = 2 if smoke else 4
+    roles = "1p+1d" if smoke else "2p+2d"
+    n_requests = 10 if smoke else 20
+    gap = 3 if smoke else 2          # one arrival per `gap` rounds
+    mixed_slots = 4
+    budget = 16
+    role_kw = {"prefill": {"n_slots": 2}, "decode": {"n_slots": 6}}
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, model.cfg.vocab,
+                            size=int(rng.integers(32, 49))).astype(np.int32)
+               for _ in range(n_requests)]
+    kw = dict(max_seq=96, cache_kind="paged", block_size=BLOCK,
+              schedule="hybrid", prefill_chunk=CHUNK, token_budget=budget)
+    print_fn(f"\n# disaggregated: {n_requests} requests arriving every {gap} "
+             f"rounds, {n_replicas} replicas ({roles} at 2P/6D slots vs "
+             f"all-mixed at {mixed_slots}), paged/hybrid, token_budget="
+             f"{budget}, max_new=16")
+    print_fn("layout,rounds,generated,ttft_rounds_mean,ttft_rounds_p99,"
+             "migrations")
+    results = {}
+    for label, role_spec in (("mixed", None), ("disagg", roles)):
+        reqs, stats = _serve_paced(
+            model, params, prompts, n_replicas, gap, max_new=16,
+            roles=role_spec, role_kw=role_kw if role_spec else None,
+            n_slots=mixed_slots, **kw,
+        )
+        assert all(r.done for r in reqs)
+        results[label] = stats
+        print_fn(f"{label},{stats.rounds},{stats.generated},"
+                 f"{stats.mean_ttft_rounds:.2f},"
+                 f"{stats.ttft_rounds_percentile(99):.0f},{stats.migrations}")
+    mixed, disagg = results["mixed"], results["disagg"]
+    assert disagg.migrations > 0, "disaggregated run performed no migrations"
+    assert disagg.mean_ttft_rounds <= mixed.mean_ttft_rounds, (
+        f"disaggregated mean TTFT {disagg.mean_ttft_rounds:.2f} rounds above "
+        f"mixed {mixed.mean_ttft_rounds:.2f}"
+    )
+    gain = mixed.mean_ttft_rounds / max(disagg.mean_ttft_rounds, 1e-9)
+    print_fn(f"# disagg TTFT gain: {gain:.2f}x "
+             f"({mixed.mean_ttft_rounds:.1f} -> {disagg.mean_ttft_rounds:.1f} "
+             f"rounds, {disagg.migrations} migrations)")
+    return {"disagg_ttft_gain": gain}
+
+
 def main(print_fn=print, smoke: bool = False) -> dict:
     cfg = reduce_config("llama3.2-1b")
     model = build_model(cfg, Env())
     params = model.init(jax.random.key(0))
     metrics = scaling_sweep(model, params, print_fn, smoke)
     metrics.update(affinity_compare(model, params, print_fn, smoke))
+    metrics.update(disagg_compare(model, params, print_fn, smoke))
     return metrics
 
 

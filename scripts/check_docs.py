@@ -1,0 +1,161 @@
+"""CI docs checker: broken links, anchors, and stale code pointers.
+
+  python scripts/check_docs.py [README.md docs/*.md ...]
+
+Three checks over the repo's markdown (defaults: ``README.md`` and
+``docs/*.md``):
+
+* **links** — every relative markdown link ``[text](path)`` must point
+  at a file or directory that exists (external ``http(s)://`` /
+  ``mailto:`` links are not fetched);
+* **anchors** — a link's ``#fragment`` must match a heading in the
+  target file, using GitHub's heading-slug rules (lowercase, punctuation
+  stripped, spaces to hyphens, ``-N`` suffixes for duplicates);
+* **code pointers** — every backticked ``path.py:Symbol`` or
+  ``path.py:Class.method`` reference must resolve: the file exists and
+  defines the named class/function (``class Sym``/``def Sym`` scan, so a
+  rename that orphans the docs fails CI instead of rotting).
+
+Exits nonzero listing every problem; prints a per-file summary
+otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `src/repro/serving/engine.py:Engine.import_request` and friends
+POINTER_RE = re.compile(
+    r"`([\w./\-]+\.py):([A-Za-z_]\w*(?:\.[A-Za-z_]\w*)?)`"
+)
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, drop punctuation,
+    hyphenate spaces."""
+    text = re.sub(r"[`*]", "", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # [text](url)
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(md_path: Path) -> set[str]:
+    slugs: dict[str, int] = {}
+    out: set[str] = set()
+    in_fence = False
+    for line in md_path.read_text().splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = slugs.get(slug, 0)
+        slugs[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def _strip_fences(text: str) -> str:
+    """Drop fenced code blocks (links/pointers inside are examples)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_links(md_path: Path, text: str) -> list[str]:
+    problems = []
+    base = md_path.parent
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            dest = (base / path_part).resolve()
+            if not dest.exists():
+                problems.append(f"{md_path}: broken link -> {target}")
+                continue
+        else:
+            dest = md_path                       # same-file #anchor
+        if anchor:
+            if dest.suffix.lower() not in (".md", ".markdown"):
+                continue                         # e.g. file.py#L10
+            if anchor not in heading_slugs(dest):
+                problems.append(
+                    f"{md_path}: broken anchor -> {target} "
+                    f"(no heading slugs to '{anchor}' in {dest.name})"
+                )
+    return problems
+
+
+def _defines(source: str, symbol: str) -> bool:
+    parts = symbol.split(".")
+    for i, part in enumerate(parts):
+        kind = r"(?:class|def)" if i == 0 else r"def"
+        if not re.search(rf"^\s*{kind}\s+{re.escape(part)}\b", source,
+                         re.MULTILINE):
+            return False
+    return True
+
+
+def check_pointers(md_path: Path, text: str) -> list[str]:
+    problems = []
+    for rel, symbol in POINTER_RE.findall(text):
+        target = REPO / rel
+        if not target.exists():
+            problems.append(
+                f"{md_path}: stale pointer `{rel}:{symbol}` (no such file)"
+            )
+            continue
+        if not _defines(target.read_text(), symbol):
+            problems.append(
+                f"{md_path}: stale pointer `{rel}:{symbol}` "
+                f"({symbol.split('.')[0]} not defined in {rel})"
+            )
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    files = ([Path(a) for a in args] if args
+             else [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))])
+    problems: list[str] = []
+    for md in files:
+        if not md.exists():
+            problems.append(f"{md}: file not found")
+            continue
+        text = _strip_fences(md.read_text())
+        link_p = check_links(md, text)
+        ptr_p = check_pointers(md, text)
+        problems += link_p + ptr_p
+        n_links = len([t for t in LINK_RE.findall(text)
+                       if not t.startswith(("http://", "https://"))])
+        n_ptrs = len(POINTER_RE.findall(text))
+        status = "FAIL" if (link_p or ptr_p) else "ok"
+        print(f"{md.relative_to(REPO) if md.is_relative_to(REPO) else md}: "
+              f"{n_links} links, {n_ptrs} code pointers [{status}]")
+    if problems:
+        print("\ndocs check FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

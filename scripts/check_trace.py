@@ -19,7 +19,8 @@ from collections import defaultdict
 from repro.serving.telemetry import validate_trace
 
 
-def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False) -> list[str]:
+def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False,
+          expect_migrate_marks: bool = False) -> list[str]:
     """Return problem strings (empty = the trace passes the smoke bar)."""
     problems = validate_trace(obj)
     if problems:
@@ -28,6 +29,7 @@ def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False) -> list[
     decodes: dict[int, set[int]] = defaultdict(set)   # replica -> uids
     finishes: dict[int, set[int]] = defaultdict(set)
     n_spills = 0
+    n_migrates = 0
     for e in events:
         args = e.get("args", {})
         if e["ph"] == "X" and e["name"].startswith("decode") and e["dur"] >= 0:
@@ -36,8 +38,26 @@ def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False) -> list[
             finishes[e["pid"]].add(args.get("uid", -1))
         if e["ph"] == "i" and e["name"] == "kv_spill":
             n_spills += 1
+        if e["ph"] == "i" and e["name"] == "kv_migrate":
+            n_migrates += 1
     if expect_spill_marks and n_spills == 0:
         problems.append("no kv_spill marks (host-tier smoke expected >= 1)")
+    if expect_migrate_marks and n_migrates == 0:
+        problems.append(
+            "no kv_migrate marks (disaggregated smoke expected >= 1)"
+        )
+    if expect_migrate_marks:
+        # disaggregated layout: prefill-role replicas hand every request
+        # off before it finishes, so complete spans exist only globally
+        all_complete = (set().union(*decodes.values()) if decodes else set()) \
+            & (set().union(*finishes.values()) if finishes else set())
+        if not all_complete:
+            problems.append(
+                "no complete request span on any replica "
+                f"(decoded uids {sorted(set().union(*decodes.values()) if decodes else set())}, "
+                f"finished uids {sorted(set().union(*finishes.values()) if finishes else set())})"
+            )
+        return problems
     for r in range(n_replicas):
         complete = decodes.get(r, set()) & finishes.get(r, set())
         if not complete:
@@ -57,21 +77,30 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--expect-spill-marks", action="store_true",
                     help="require at least one kv_spill instant event "
                          "(the host-KV-tier serve smoke)")
+    ap.add_argument("--expect-migrate-marks", action="store_true",
+                    help="require at least one cluster-row kv_migrate "
+                         "event (the disaggregated serve smoke); relaxes "
+                         "the complete-span requirement from per-replica "
+                         "to global, since prefill-role replicas migrate "
+                         "requests away before they finish")
     args = ap.parse_args(argv)
     try:
         obj = json.loads(open(args.trace).read())
     except (OSError, ValueError) as e:
         print(f"cannot read trace {args.trace}: {e}", file=sys.stderr)
         return 1
-    problems = check(obj, args.replicas, args.expect_spill_marks)
+    problems = check(obj, args.replicas, args.expect_spill_marks,
+                     args.expect_migrate_marks)
     if problems:
         print(f"trace check FAILED for {args.trace}:", file=sys.stderr)
         for p in problems:
             print(f"  {p}", file=sys.stderr)
         return 1
     n_events = len(obj["traceEvents"])
+    scope = ("cluster-wide" if args.expect_migrate_marks
+             else f"{args.replicas} replica(s)")
     print(f"trace OK: {args.trace} ({n_events} events, "
-          f"complete spans on {args.replicas} replica(s))")
+          f"complete spans on {scope})")
     return 0
 
 

@@ -13,6 +13,7 @@ matching DCN-connected pods.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def compat_mesh(shape, axes):
@@ -40,3 +41,30 @@ def make_host_mesh(model_parallel: int = 1):
 
 def mesh_axes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def replica_meshes(n_replicas: int, model_parallel: int = 1) -> list:
+    """One (data, model) mesh per serving replica.
+
+    Partitions this host's devices into ``n_replicas`` disjoint
+    contiguous slices so each cluster replica (e.g. a disaggregated
+    prefill or decode engine) owns its own devices.  When the host
+    cannot be split that way — fewer devices than replicas, or a
+    non-divisible count, i.e. the single-device CPU test environment —
+    every replica shares the one host mesh instead, which keeps the
+    cluster tier runnable anywhere at the cost of device isolation.
+    """
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    n = jax.device_count()
+    if n % n_replicas != 0 or n < n_replicas:
+        return [make_host_mesh(model_parallel)] * n_replicas
+    per = n // n_replicas
+    mp = model_parallel if per % model_parallel == 0 else 1
+    devices = jax.devices()
+    meshes = []
+    for i in range(n_replicas):
+        sl = devices[i * per:(i + 1) * per]
+        grid = np.asarray(sl).reshape(per // mp, mp)
+        meshes.append(jax.sharding.Mesh(grid, ("data", "model")))
+    return meshes

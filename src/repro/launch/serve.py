@@ -34,6 +34,15 @@ the first replica (in policy order) that can admit it now, spilling over
 when the first choice is saturated.  ``prefix_affinity`` (paged cache
 only in effect) routes shared-prompt traffic to the replica already
 holding its prefix blocks.
+
+``--role-map SPEC`` disaggregates the cluster into prefill/decode
+replicas (``1p+1d``, ``2p+2d``, ``2p+1d+1m``, or an explicit comma list
+like ``prefill,decode``): prompts are admitted to prefill-role replicas
+and their KV blocks migrate to the least-loaded decode-role replica when
+the last prefill chunk completes.  ``--decode-slots N`` gives the
+decode-role replicas a larger slot count than ``--slots`` (their block
+budget scales along).  When the host has enough devices each replica is
+placed on its own mesh slice; otherwise all replicas share the host mesh.
 """
 from __future__ import annotations
 
@@ -47,9 +56,9 @@ from repro.configs import SHAPES, get_config
 from repro.configs.reduced import reduce_config
 from repro.core import balance
 from repro.core.placement import Env
-from repro.launch.mesh import make_host_mesh, mesh_axes
+from repro.launch.mesh import make_host_mesh, mesh_axes, replica_meshes
 from repro.models.registry import build_model
-from repro.serving.cluster import ROUTE_POLICIES, Cluster
+from repro.serving.cluster import ROUTE_POLICIES, Cluster, parse_roles
 from repro.serving.engine import Engine, Request
 from repro.serving.sampler import SamplerConfig
 from repro.serving.telemetry import (
@@ -113,6 +122,14 @@ def main():
                     help="engine replicas behind the shared global queue")
     ap.add_argument("--route", choices=ROUTE_POLICIES, default="round_robin",
                     help="replica routing policy (with --replicas > 1)")
+    ap.add_argument("--role-map", default=None, metavar="SPEC",
+                    help="disaggregated replica roles: shorthand like "
+                         "'1p+1d' / '2p+2d+1m' or a comma list like "
+                         "'prefill,decode' (default: all mixed)")
+    ap.add_argument("--decode-slots", type=int, default=None,
+                    help="slot count override for decode-role replicas "
+                         "(default: --slots; their paged block budget "
+                         "scales along)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record request spans + step timeline and write a "
                          "Perfetto/Chrome-trace JSON here")
@@ -155,8 +172,25 @@ def main():
         async_mode=args.async_mode == "on",
     )
     tracer = Tracer(wall=True) if args.trace else None
+    roles = parse_roles(args.role_map, args.replicas) if args.role_map else None
+    role_kw = ({"decode": {"n_slots": args.decode_slots}}
+               if args.decode_slots else None)
+    model_factory = None
+    if args.replicas > 1:
+        meshes = replica_meshes(args.replicas)
+        if len({id(m) for m in meshes}) > 1:
+            # enough devices for disjoint per-replica mesh slices: give
+            # each replica engine a model built against its own slice
+            def model_factory(i, _meshes=meshes):
+                ax = mesh_axes(_meshes[i])
+                env_i = Env(
+                    axes=ax if _meshes[i].devices.size > 1 else {},
+                    kv_policy=plan.kv_policy,
+                )
+                return build_model(cfg, env_i)
     cluster = (
         Cluster(model, params, args.replicas, route=args.route, tracer=tracer,
+                roles=roles, role_kw=role_kw, model_factory=model_factory,
                 **engine_kw)
         if args.replicas > 1 else None
     )
@@ -184,8 +218,16 @@ def main():
     print(f"mode: async={args.async_mode} sample={mode} "
           f"(T={sampler.temperature} top_k={sampler.top_k})")
     if cluster:
-        print(f"cluster: replicas={args.replicas} route={args.route}")
+        role_str = (" roles=" + ",".join(cluster.roles)
+                    if args.role_map else "")
+        print(f"cluster: replicas={args.replicas} route={args.route}"
+              f"{role_str}")
         print(f"requests={args.requests} {stats.summary()}")
+        if stats.migrations:
+            print(f"disagg: migrations={stats.migrations} "
+                  f"refold_moves={stats.refold_moves} "
+                  f"ttft_rounds mean {stats.mean_ttft_rounds:.1f} "
+                  f"p99 {stats.ttft_rounds_percentile(99):.0f}")
         print(f"latency: TTFT mean {snap['mean_ttft_steps']:.1f} "
               f"p50 {snap['ttft_steps_p50']:.0f} "
               f"p99 {snap['ttft_steps_p99']:.0f} engine steps, "

@@ -1,0 +1,20 @@
+"""Serving tier: continuous batching, paged KV, scheduling, clustering.
+
+Layers, bottom-up (each module's own docstring has the details):
+
+* :mod:`repro.serving.kv_cache` — dense per-slot KV slicing;
+* :mod:`repro.serving.paged` — block-pool KV: allocator, per-slot block
+  tables, jitted device ops;
+* :mod:`repro.serving.sampler` — greedy/temperature/top-k, host + device;
+* :mod:`repro.serving.scheduler` — token-budget hybrid batching;
+* :mod:`repro.serving.engine` — the per-replica continuous-batching
+  engine (dense/paged x decode-only/hybrid x sync/async), including KV
+  block export/import for cross-replica migration;
+* :mod:`repro.serving.cluster` — routed replicas behind one global
+  queue, with disaggregated prefill/decode roles and live KV migration;
+* :mod:`repro.serving.telemetry` — request-span tracing, step
+  timelines, metrics registry, Perfetto export.
+
+See ``docs/ARCHITECTURE.md`` for the cross-layer dataflow and
+``docs/serving.md`` for the serve CLI built on this package.
+"""

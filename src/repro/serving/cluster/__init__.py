@@ -4,7 +4,7 @@ See :mod:`repro.serving.cluster.cluster` for the stepping model,
 :mod:`repro.serving.cluster.router` for the routing policies, and
 :mod:`repro.serving.cluster.stats` for the aggregate metrics.
 """
-from repro.serving.cluster.cluster import Cluster
+from repro.serving.cluster.cluster import ROLES, Cluster, parse_roles
 from repro.serving.cluster.router import ROUTE_POLICIES, Router, RouterStats
 from repro.serving.cluster.stats import ClusterStats, ReplicaStats
 
@@ -12,7 +12,9 @@ __all__ = [
     "Cluster",
     "Router",
     "RouterStats",
+    "ROLES",
     "ROUTE_POLICIES",
     "ClusterStats",
     "ReplicaStats",
+    "parse_roles",
 ]

@@ -25,6 +25,14 @@ Policies (``ROUTE_POLICIES``):
 Every route decision — regardless of policy — also *records* the chosen
 replica's resident-prefix hit in ``RouterStats``, so benchmarks can
 compare the hit-rate a policy achieved without instrumenting engines.
+
+Disaggregated roles (``roles=``): each replica carries a
+``{"prefill","decode","mixed"}`` role.  New prompts only ever rank over
+the **admission targets** (prefill or mixed); :meth:`Router.rank_decode`
+ranks the **decode targets** (decode or mixed) by load for the cluster's
+prefill->decode KV migration, and :meth:`Router.rank_refold` ranks the
+admission targets by load for router-driven refold placement.  An
+all-``mixed`` cluster (the default) behaves exactly as before.
 """
 from __future__ import annotations
 
@@ -52,7 +60,8 @@ class RouterStats:
 
 
 class Router:
-    def __init__(self, engines, policy: str = "round_robin", tracer=None):
+    def __init__(self, engines, policy: str = "round_robin", tracer=None,
+                 roles: list[str] | None = None):
         if policy not in ROUTE_POLICIES:
             raise ValueError(
                 f"unknown route policy {policy!r} (known: {', '.join(ROUTE_POLICIES)})"
@@ -64,6 +73,20 @@ class Router:
         self.tracer = NULL_TRACER if tracer is None else tracer
         self._rr = 0
         self.stats = RouterStats(routed=[0] * len(self.engines))
+        self.roles = list(roles) if roles else ["mixed"] * len(self.engines)
+        if len(self.roles) != len(self.engines):
+            raise ValueError(
+                f"{len(self.roles)} roles for {len(self.engines)} replicas"
+            )
+        self._admit_idx = [i for i, r in enumerate(self.roles)
+                           if r in ("prefill", "mixed")]
+        self._decode_idx = [i for i, r in enumerate(self.roles)
+                            if r in ("decode", "mixed")]
+        if not self._admit_idx:
+            raise ValueError(
+                "no admission target: at least one replica must have role "
+                "'prefill' or 'mixed'"
+            )
 
     # ------------------------------------------------------------- ranking
     def _load_key(self, idx: int):
@@ -79,17 +102,43 @@ class Router:
         )
 
     def rank(self, req, hits: list[int] | None = None) -> list[int]:
-        """Replica preference order for ``req`` under the active policy.
-        ``prefix_affinity`` probes every replica unless the caller passes
-        precomputed ``hits``."""
-        n = len(self.engines)
+        """Admission-target preference order for ``req`` under the active
+        policy (decode-role replicas never prefill new prompts).
+        ``prefix_affinity`` probes every candidate unless the caller
+        passes precomputed ``hits`` (indexed by replica)."""
+        cand = self._admit_idx
+        k = len(cand)
         if self.policy == "round_robin":
-            return [(self._rr + i) % n for i in range(n)]
+            return [cand[(self._rr + i) % k] for i in range(k)]
         if self.policy == "least_loaded":
-            return sorted(range(n), key=self._load_key)
+            return sorted(cand, key=self._load_key)
         if hits is None:
-            hits = [eng.probe_prefix(req.prompt) for eng in self.engines]
-        return sorted(range(n), key=lambda i: (-hits[i],) + self._load_key(i))
+            hits = self.probe_hits(req)
+        return sorted(cand, key=lambda i: (-hits[i],) + self._load_key(i))
+
+    def probe_hits(self, req) -> list[int]:
+        """Resident-prefix hit per replica (admission targets only; a
+        decode-role replica is never probed — probes are side-effect-free
+        but also pointless there)."""
+        return [
+            self.engines[i].probe_prefix(req.prompt) if i in set(self._admit_idx)
+            else 0
+            for i in range(len(self.engines))
+        ]
+
+    def _ranked_by_load(self, idxs, exclude: int | None = None) -> list[int]:
+        return sorted((i for i in idxs if i != exclude), key=self._load_key)
+
+    def rank_decode(self, exclude: int | None = None) -> list[int]:
+        """Decode targets (decode/mixed roles) for a prefill->decode KV
+        migration, least-loaded first."""
+        return self._ranked_by_load(self._decode_idx, exclude)
+
+    def rank_refold(self, exclude: int | None = None) -> list[int]:
+        """Admission targets for re-placing a preempted request's refold,
+        least-loaded first (regardless of the admission policy: a refold
+        is load leveling, not affinity placement)."""
+        return self._ranked_by_load(self._admit_idx, exclude)
 
     # ------------------------------------------------------------- routing
     def route(self, req) -> int | None:
@@ -101,7 +150,7 @@ class Router:
         most — affinity ranking and stats share the same walk)."""
         hits = None
         if self.policy == "prefix_affinity":
-            hits = [eng.probe_prefix(req.prompt) for eng in self.engines]
+            hits = self.probe_hits(req)
         order = self.rank(req, hits)
         for pos, idx in enumerate(order):
             if not self.engines[idx].can_admit(req):
@@ -116,6 +165,6 @@ class Router:
             self.tracer.on_route(req.uid, idx, self.policy, pos, hit,
                                  len(req.prompt))
             if self.policy == "round_robin":
-                self._rr = (idx + 1) % len(self.engines)
+                self._rr = (self._admit_idx.index(idx) + 1) % len(self._admit_idx)
             return idx
         return None

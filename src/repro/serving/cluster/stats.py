@@ -13,7 +13,14 @@ decode throughput.  The cluster analogue reported here:
   a perfectly level cluster, and a bad router shows up here first;
 * ``mean_queue_wait_rounds`` — rounds a request spent in the *global*
   queue before any replica could admit it (per-replica TTFT is measured
-  by each engine separately).
+  by each engine separately);
+* ``mean_ttft_rounds`` — submit round to first-token round, the
+  *end-to-end* TTFT clock: unlike each engine's step-clock TTFT it
+  includes the global queue wait, so it is the metric disaggregated
+  (prefill/decode role) layouts are judged on;
+* ``migrations`` / ``refold_moves`` — cross-replica KV handoffs (the
+  disaggregated prefill->decode path) and router-driven refold
+  re-placements.
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ class ReplicaStats:
     routed: int                 # requests the router placed here
     n_slots: int
     engine: EngineStats         # the replica engine's own counters
+    role: str = "mixed"         # disaggregated serving role
 
     def utilization(self, rounds: int) -> float:
         """Generated tokens per slot-round offered to this replica."""
@@ -51,10 +59,24 @@ class ClusterStats:
     probed_tokens: int          # total prompt tokens routed
     queue_wait_sum: int         # rounds spent in the global queue
     queue_wait_count: int
+    migrations: int = 0         # prefill->decode KV handoffs
+    refold_moves: int = 0       # refolds re-placed off their home replica
+    # submit round -> first-token round per request (end-to-end TTFT)
+    ttft_rounds_samples: list[int] = dataclasses.field(default_factory=list)
 
     @property
     def generated(self) -> int:
         return sum(r.engine.generated for r in self.replicas)
+
+    @property
+    def mean_ttft_rounds(self) -> float:
+        """Mean end-to-end TTFT in cluster rounds (includes the global
+        queue wait; see module docstring)."""
+        return (sum(self.ttft_rounds_samples)
+                / max(len(self.ttft_rounds_samples), 1))
+
+    def ttft_rounds_percentile(self, p: float) -> float:
+        return percentile(self.ttft_rounds_samples, p)
 
     @property
     def preemptions(self) -> int:
@@ -122,15 +144,21 @@ class ClusterStats:
 
     def summary(self) -> str:
         per = " ".join(
-            f"r{r.replica}:routed={r.routed},gen={r.engine.generated},"
+            f"r{r.replica}[{r.role[0].upper()}]:routed={r.routed},"
+            f"gen={r.engine.generated},"
             f"util={r.utilization(self.rounds):.2f}"
             for r in self.replicas
         )
+        extra = ""
+        if self.migrations or self.refold_moves:
+            extra = (f" migrations={self.migrations}"
+                     f" refold_moves={self.refold_moves}")
         return (
             f"rounds={self.rounds} generated={self.generated} "
             f"tokens/round={self.tokens_per_round:.2f} "
             f"ttft={self.mean_ttft_steps:.1f} "
+            f"ttft_rounds={self.mean_ttft_rounds:.1f} "
             f"queue_wait={self.mean_queue_wait_rounds:.1f} "
             f"imbalance={self.load_imbalance:.2f} spills={self.spills} "
-            f"prefix_hit_rate={self.prefix_hit_rate:.2f} | {per}"
+            f"prefix_hit_rate={self.prefix_hit_rate:.2f}{extra} | {per}"
         )

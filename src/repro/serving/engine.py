@@ -67,6 +67,17 @@ Step accounting: ``EngineStats.engine_steps`` counts fixed-shape model
 dispatches; a decode-only whole prefill of ``L`` tokens counts
 ``ceil(L / prefill_chunk)`` steps (the hybrid-batch units it occupies),
 so TTFT/throughput in steps are comparable across schedules.
+
+Cross-replica migration (disaggregated serving): a paged request whose
+prefill just completed can leave this engine and continue decoding on
+another — :meth:`Engine.preview_export` sizes the move without side
+effects, :meth:`Engine.export_request` detaches the slot and returns a
+``MigrationTicket`` (block payloads gathered in storage dtype, scale
+pools included, shared-prefix blocks copied out so remaining owners
+keep theirs), and :meth:`Engine.can_import` /
+:meth:`Engine.import_request` admit it on the destination, deduping
+against blocks already resident under the same chain hash.  The
+cluster drives this; a refused import simply decodes in place.
 """
 from __future__ import annotations
 
@@ -126,6 +137,8 @@ class EngineStats:
     victim_drains: int = 0          # async: partial (victim-only) drains
     spills: int = 0                 # KV blocks copied device -> host tier
     rehydrations: int = 0           # KV blocks copied host tier -> device
+    migrations_out: int = 0         # resident requests exported to a peer
+    migrations_in: int = 0          # resident requests imported from a peer
     ttft_steps_sum: int = 0
     ttft_count: int = 0
     # raw per-request samples (ttft: submit->first-token in engine steps;
@@ -176,6 +189,25 @@ class EngineLoad:
 
 
 @dataclasses.dataclass
+class MigrationTicket:
+    """Host-side description of an exported resident request's KV.
+
+    ``keys`` is the paged hash-key chain aligned with the payload's block
+    columns (None entries are diverged tails / decode headroom); the
+    dense cache has no keys (``None``) and its payload is a batch-1
+    sub-cache.  ``length`` is the KV positions held (prompt + observed
+    output - 1: the last sampled token is the next step's *input*).
+    """
+
+    length: int
+    kv_dtype: str
+    keys: list | None = None         # paged: per-block hash chain
+    n_blocks: int = 0                # paged: payload block count
+    block_size: int = 0              # paged: source pool block granularity
+    src_step: int = 0                # source engine-step clock at export
+
+
+@dataclasses.dataclass
 class _PendingStep:
     """One dispatched-but-unobserved model step (async pipeline).
 
@@ -218,6 +250,7 @@ class Engine:
         async_mode: bool = True,
         tracer=None,
         replica: int = 0,
+        role: str = "mixed",
     ):
         self.model = model
         self.params = params
@@ -227,6 +260,14 @@ class Engine:
         self.schedule = schedule
         self.prefill_chunk = prefill_chunk
         self.async_mode = async_mode
+        # disaggregated serving: the role is *advisory* routing metadata
+        # (the cluster admits prompts to prefill/mixed replicas and
+        # migrates finished prefills off "prefill" replicas) — the engine
+        # itself always handles both phases, so a migration that finds no
+        # destination degrades gracefully to decoding in place
+        if role not in ("prefill", "decode", "mixed"):
+            raise ValueError(f"unknown role {role!r}")
+        self.role = role
         self.slots: list[Request | None] = [None] * n_slots
         self.stats = EngineStats()
         self.rng = rng if rng is not None else jax.random.key(0)
@@ -595,8 +636,12 @@ class Engine:
             return False
         if self.cache_kind != "paged":
             return True
-        prompt = np.asarray(req.prompt, np.int32)
-        return self.manager.admit_shortfall(prompt) <= self.pool.free_count
+        # a preempted request re-admits with its generated tokens folded
+        # into the prefill, so the block bill covers prompt + output
+        tokens = self._refold(req) if req.out_tokens else np.asarray(
+            req.prompt, np.int32
+        )
+        return self.manager.admit_shortfall(tokens) <= self.pool.free_count
 
     def probe_prefix(self, prompt: np.ndarray) -> int:
         """Longest resident prompt prefix, in tokens (0 for the dense
@@ -605,6 +650,223 @@ class Engine:
         if self.cache_kind != "paged":
             return 0
         return self.manager.probe_prefix(np.asarray(prompt, np.int32))
+
+    # ---------------------------------------------------- KV block migration
+    def export_request(self, slot: int):
+        """Detach the resident request on ``slot``, with its KV, for
+        migration to a peer replica (the disaggregated prefill->decode
+        handoff; also load leveling).
+
+        Async mode observes the victim's in-flight tokens first
+        (:meth:`_observe_victim`) so the exported history is exact — which
+        may reveal the request already finished; then, or when the slot
+        holds a cold host-tier prefix (only fully device-resident
+        sequences migrate), the export is declined and ``None`` returned.
+
+        Otherwise returns ``(req, ticket, payload)``: the request (its
+        slot here is freed), a :class:`MigrationTicket`, and the
+        storage-dtype KV payload (:func:`paged.device.copy_blocks_out` /
+        :func:`kv_cache.export_slot`).  Shared-prefix blocks are
+        **copy-on-export**: the peer copies the payload while this
+        replica's remaining owners keep the physical block and its hash
+        entry; a dying private registered prefix still free-time-spills
+        to the host tier, so migrating a sequence away never cold-starts
+        this replica's prefix cache.
+        """
+        req = self.slots[slot]
+        if req is None or req.done:
+            return None
+        if self.async_mode:
+            self._observe_victim(slot)
+            req = self.slots[slot]
+            if req is None or req.done:
+                return None             # finished while observing
+        if self.cache_kind == "paged" and self.manager.cold_blocks[slot]:
+            return None
+        length = len(req.prompt) + len(req.out_tokens) - 1
+        if self.cache_kind == "paged":
+            ids = list(self.manager.blocks[slot])
+            payload = paged_dev.copy_blocks_out(self.cache, ids)
+            _, keys = self.manager.export_slot(slot)
+            # dying private prefixes may free-time-spill host-ward: apply
+            # before the freed device blocks can be reallocated/rewritten
+            self._apply_pool_directives()
+            self.cache = paged_dev.sync_slot(
+                self.cache, slot, self.manager.tables[slot], 0
+            )
+            ticket = MigrationTicket(
+                length=length, kv_dtype=self.kv_dtype, keys=keys,
+                n_blocks=len(ids), block_size=self.block_size,
+                src_step=self.stats.engine_steps,
+            )
+        else:
+            payload = kv_cache.export_slot(self.cache, slot)
+            self.cache = kv_cache.reset_slot(self.cache, slot)
+            ticket = MigrationTicket(
+                length=length, kv_dtype=self.kv_dtype,
+                src_step=self.stats.engine_steps,
+            )
+        self.slots[slot] = None
+        self.stats.migrations_out += 1
+        return req, ticket, payload
+
+    def preview_export(self, slot: int) -> MigrationTicket | None:
+        """Read-only ticket for what :meth:`export_request` would produce
+        — the cluster probes destinations (:meth:`can_import`) *before*
+        paying the export.  Exact: the manager's block/key lists already
+        reflect every dispatched append, and observing the victim's
+        in-flight tokens at export time only converts them to observed
+        output (same KV length) or finishes the request (export declines).
+        None when the slot is empty, done, or holds a cold host-tier
+        prefix."""
+        req = self.slots[slot]
+        if req is None or req.done:
+            return None
+        length = len(req.prompt) + len(req.out_tokens) + req.in_flight - 1
+        if self.cache_kind != "paged":
+            return MigrationTicket(
+                length=length, kv_dtype=self.kv_dtype,
+                src_step=self.stats.engine_steps,
+            )
+        if self.manager.cold_blocks[slot]:
+            return None
+        return MigrationTicket(
+            length=length, kv_dtype=self.kv_dtype,
+            keys=list(self.manager.keys[slot]),
+            n_blocks=len(self.manager.blocks[slot]),
+            block_size=self.block_size,
+            src_step=self.stats.engine_steps,
+        )
+
+    def can_import(self, ticket: MigrationTicket) -> bool:
+        """Read-only: could :meth:`import_request` land ``ticket`` right
+        now without touching anyone?  Conservative — the import itself
+        can additionally free blocks via spill-before-evict when a host
+        tier exists, but it never preempts, so the cluster probes here
+        before paying the export."""
+        if ticket.kv_dtype != self.kv_dtype or ticket.length >= self.max_seq - 1:
+            return False
+        if (ticket.keys is None) != (self.cache_kind != "paged"):
+            return False
+        if not self._free_slots():
+            return False
+        if self.cache_kind != "paged":
+            return True
+        if ticket.block_size != self.block_size:
+            return False
+        return (
+            self.manager.import_shortfall(ticket.keys, ticket.length)
+            <= self.pool.free_count
+        )
+
+    def import_request(self, req: Request, ticket: MigrationTicket,
+                       payload) -> int | None:
+        """Land a migrating request: allocate/dedup blocks
+        (:meth:`BlockPool.import_blocks`), scatter the payload columns the
+        local prefix cache does not already hold, and resume decode with
+        the same next-input token over the same KV — greedy output is
+        token-identical to never having migrated.  Under block pressure
+        with a host tier, resident cold prefixes spill host-ward
+        (spill-before-evict) rather than preempting anyone.  Returns the
+        landing slot, or ``None`` — nothing mutated — when capacity cannot
+        be found."""
+        if ticket.kv_dtype != self.kv_dtype:
+            return None
+        free = self._free_slots()
+        if not free:
+            return None
+        slot = free[0]
+        if self.cache_kind == "paged":
+            fresh = self.manager.import_shortfall(ticket.keys, ticket.length)
+            if fresh > self.pool.free_count:
+                if not self.pool.host_blocks:
+                    return None
+                alive = [i for i, s in enumerate(self.slots) if s is not None]
+                while fresh > self.pool.free_count and self._try_spill(alive):
+                    pass
+                if fresh > self.pool.free_count:
+                    return None
+            res = self.manager.import_slot(slot, ticket.keys, ticket.length)
+            if res is None:
+                return None
+            ids, needs = res
+            # copy only the payload columns the local prefix cache did not
+            # already hold (a trailing headroom block has no payload column)
+            sel = [j for j in range(ticket.n_blocks) if needs[j]]
+            if sel:
+                self.cache = paged_dev.copy_blocks_in(
+                    self.cache, self._localize(payload), sel,
+                    [ids[j] for j in sel],
+                )
+            self.cache = paged_dev.sync_slot(
+                self.cache, slot, self.manager.tables[slot], ticket.length
+            )
+        else:
+            self.cache = kv_cache.insert(self.cache, self._localize(payload), slot)
+        self.slots[slot] = req
+        # translate decode-latency accounting onto this engine's step
+        # clock (finish_step will be stamped here; the elapsed decode
+        # steps already spent on the source carry over)
+        if req.first_token_step >= 0:
+            req.first_token_step = (
+                self.stats.engine_steps - (ticket.src_step - req.first_token_step)
+            )
+        if self.async_mode:
+            # resume the device-side token feedback: the last sampled
+            # token is the next decode input, exactly as on the source
+            self._tok_state = paged_dev.feed_token(
+                self._tok_state, slot, int(req.out_tokens[-1])
+            )
+            self._eos_dev = paged_dev.set_stop_id(self._eos_dev, slot, req.eos_id)
+        self.stats.migrations_in += 1
+        return slot
+
+    def _localize(self, payload: Pytree) -> Pytree:
+        """Move a migration payload onto this engine's device (no-op when
+        source and destination share one, e.g. single-host CPU runs;
+        multi-device *sharded* pools would need a resharding transfer and
+        are out of scope for migration)."""
+        anchor = self.cache["lengths"]
+        devs = anchor.devices() if hasattr(anchor, "devices") else set()
+        if len(devs) == 1:
+            (dev,) = devs
+            return jax.tree.map(lambda a: jax.device_put(a, dev), payload)
+        return payload
+
+    # ---------------------------------------------- cluster refold leveling
+    def can_admit_next(self) -> bool:
+        """Will this engine's *own* queue head be admittable at the next
+        step?  (:meth:`can_admit` answers for a *foreign* request and says
+        no whenever anything is queued locally — this is the home-replica
+        mirror the cluster consults before moving a preempted request's
+        refold to a less-loaded replica.)"""
+        if not len(self.sched):
+            return False
+        fl = self.sched.inflight
+        if self.slots.count(None) - (0 if fl is None else 1) < 1:
+            return False
+        if self.cache_kind != "paged":
+            return True
+        head = self.sched.queue[0]
+        tokens = self._refold(head) if head.out_tokens else np.asarray(
+            head.prompt, np.int32
+        )
+        return self.manager.admit_shortfall(tokens) <= self.pool.free_count
+
+    def take_refold(self) -> Request | None:
+        """Pop this engine's queue head if it is a preempted (refolding)
+        request the cluster wants to re-place elsewhere; None otherwise."""
+        q = self.sched.queue
+        if q and q[0].out_tokens and not q[0].done:
+            return self.sched.pop()
+        return None
+
+    def adopt_refold(self, req: Request) -> None:
+        """Accept a refolding request moved from another replica.  It
+        keeps queue-front priority (it has already waited out a
+        preemption) and re-enters on this engine's step clock."""
+        req.submit_step = self.stats.engine_steps
+        self.sched.push_front(req)
 
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]

@@ -36,6 +36,18 @@ def insert(cache: Pytree, sub: Pytree, slot: int) -> Pytree:
     return out
 
 
+def export_slot(cache: Pytree, slot: int) -> Pytree:
+    """Gather one slot's stripe as a batch-1 sub-cache (the inverse of
+    :func:`insert`): the dense-cache migration payload.  Includes the
+    slot's ``lengths`` entry, so ``insert`` on the destination replica
+    restores both KV content and logical length in one call."""
+    out = {}
+    for k, v in cache.items():
+        ax = batch_axis(k)
+        out[k] = jnp.take(v, jnp.asarray([slot]), axis=ax)
+    return out
+
+
 def reset_slot(cache: Pytree, slot: int) -> Pytree:
     """Zero a finished slot (length <- 0 frees it logically)."""
     out = {}

@@ -39,6 +39,17 @@ emitted as a ``("spill", dev, host)`` / ``("rehydrate", host, dev)``
 directive on :attr:`directives`; the engine drains them into the actual
 device<->host block copies (``serving/paged/device.py``) before any
 subsequent pool write can clobber the source.
+
+Migration (cross-replica handoff)
+---------------------------------
+:meth:`BlockPool.export_blocks` releases a departing sequence's blocks
+refcount-aware: a sole-owner block frees outright, a shared block only
+decrefs (the caller copies its contents out first — copy-on-export — so
+remaining owners and the hash entry stay intact).  On the destination,
+:meth:`BlockPool.import_blocks` allocates fresh blocks but dedups
+against blocks already resident under the same chain-hash key (incref
+instead of a device copy), so migrating a popular prefix twice costs
+one copy.
 """
 from __future__ import annotations
 
@@ -58,6 +69,9 @@ class PoolStats:
     rehydrates: int = 0      # host blocks copied back device-ward
     host_evictions: int = 0  # cold host blocks dropped for host pressure
     host_peak_in_use: int = 0
+    exports: int = 0         # blocks released to a migrating sequence
+    imports: int = 0         # blocks landed from a migrating sequence
+    import_dedup: int = 0    # import positions satisfied by a resident block
 
 
 class BlockPool:
@@ -131,6 +145,69 @@ class BlockPool:
             self.invalidate(block)
             self._free.append(block)
             self.stats.frees += 1
+
+    # ------------------------------------------------------------ migration
+    def export_blocks(self, ids: list[int]) -> list[bool]:
+        """Release a migrating sequence's blocks from *this* pool after
+        their contents were gathered device-side (``copy_blocks_out``).
+
+        Refcount-aware: a shared-prefix block is **copy-on-export** — the
+        peer replica copies the payload while the remaining owners here
+        keep the physical block *and* its hash entry untouched (only this
+        sequence's reference drops).  A privately-owned block frees
+        through the normal :meth:`decref` path, so a hash-registered
+        prefix still free-time-spills to the host tier: migrating a
+        sequence away does not cold-start this replica's prefix cache.
+
+        Returns per-block ``was_shared`` flags (diagnostics/tests).
+        """
+        shared = []
+        for b in ids:
+            if b == 0:
+                # cold (live-spilled) marker — callers exclude these
+                raise ValueError("cannot export a cold (host-resident) block")
+            shared.append(self.refcount(b) > 1)
+            self.decref(b)
+        self.stats.exports += len(ids)
+        return shared
+
+    def import_blocks(
+        self, keys: list
+    ) -> tuple[list[int], list[bool]] | None:
+        """Allocate landing blocks for a migrating sequence described by
+        its per-block hash ``keys`` (None = unkeyed: diverged tail or
+        decode headroom).
+
+        A key already resident in *this* pool's prefix hash is reused
+        (incref, no device copy — migration dedups against the
+        destination's prefix cache; contents are identical by
+        construction since the key is a chain hash of the whole token
+        prefix).  Everything else allocates a fresh block, registered
+        under its key so the migrated prefix is matchable here.
+
+        Returns ``(block_ids, needs_copy)`` aligned with ``keys``, or
+        ``None`` — nothing mutated — when the free list cannot supply the
+        fresh blocks (the caller spills or declines the migration).
+        """
+        hits = [self.peek(k) if k is not None else None for k in keys]
+        fresh = sum(1 for h in hits if h is None)
+        if fresh > self.free_count:
+            return None
+        ids, needs = [], []
+        for k, hit in zip(keys, hits):
+            if hit is not None:
+                self.incref(hit)
+                ids.append(hit)
+                needs.append(False)
+                self.stats.import_dedup += 1
+            else:
+                b = self.alloc()
+                if k is not None:
+                    self.register(k, b)
+                ids.append(b)
+                needs.append(True)
+        self.stats.imports += len(ids)
+        return ids, needs
 
     # ------------------------------------------------------- prefix caching
     def lookup(self, key: Hashable) -> int | None:

@@ -9,6 +9,14 @@ slice into a block, duplicate a block (copy-on-write), and refresh one
 block-table row.  Block ids arrive as traced scalars so admission never
 recompiles.
 
+Two whole-block transfer families ride the same layout: host-tier
+moves (:func:`spill_block` / :func:`rehydrate_block`, device<->host in
+storage dtype) and cross-replica migration
+(:func:`copy_blocks_out` gathers a block-id list into a compact
+payload, :func:`copy_blocks_in` scatters it into the destination pool —
+quantized pools move payload + scale pools as-is, bit-exact, no
+dequant/requant round trip).
+
 The module also hosts the async engine's tiny per-slot state vectors
 (:func:`feed_token` token feedback, :func:`set_stop_id` stop flags):
 same donated, recompile-free update pattern, shared by both cache kinds.
@@ -198,6 +206,63 @@ def rehydrate_block(cache: Pytree, host: int, dev: int) -> Pytree:
     if "k_scale" in cache:
         out["k_scale"] = _xfer_block(cache["k_scale"], cache["host_k_scale"], host, dev)
         out["v_scale"] = _xfer_block(cache["v_scale"], cache["host_v_scale"], host, dev)
+    return out
+
+
+# NOT donated: the gathered payload must outlive the source pool (the
+# exporting engine keeps stepping while the destination lands the copy)
+@jax.jit
+def _gather_blocks(pool: jax.Array, ids: jax.Array) -> jax.Array:
+    return pool[:, ids]
+
+
+@_donate0
+def _scatter_blocks(
+    pool: jax.Array, payload: jax.Array, src_sel: jax.Array, dst_ids: jax.Array
+) -> jax.Array:
+    return pool.at[:, dst_ids].set(payload[:, src_sel].astype(pool.dtype))
+
+
+def copy_blocks_out(cache: Pytree, ids: list[int]) -> Pytree:
+    """Gather a migrating sequence's physical blocks out of this pool in
+    **storage dtype**: a quantized pool exports its int8/fp8 payload bytes
+    plus the matching scale-pool tiles, so migration across replicas of
+    the same ``kv_dtype`` tier is bit-exact (no dequant/requant round
+    trip).  Returns a ``{"k": (L, n, Hkv, bs, Dh), ...}`` payload pytree
+    detached from the pool (the source keeps stepping afterwards)."""
+    idx = jnp.asarray(ids, jnp.int32)
+    out = {
+        "k": _gather_blocks(cache["k"], idx),
+        "v": _gather_blocks(cache["v"], idx),
+    }
+    if "k_scale" in cache:
+        out["k_scale"] = _gather_blocks(cache["k_scale"], idx)
+        out["v_scale"] = _gather_blocks(cache["v_scale"], idx)
+    return out
+
+
+def copy_blocks_in(
+    cache: Pytree, payload: Pytree, src_sel: list[int], dst_ids: list[int]
+) -> Pytree:
+    """Scatter payload columns ``src_sel`` (positions in the exported
+    block list) into this pool's blocks ``dst_ids``.  The selection lets
+    the importer skip positions its own prefix cache already holds
+    (``BlockPool.import_blocks`` dedup).  Storage-dtype on both sides:
+    same-tier migration moves bytes, never values."""
+    sel = jnp.asarray(src_sel, jnp.int32)
+    idx = jnp.asarray(dst_ids, jnp.int32)
+    out = {
+        **cache,
+        "k": _scatter_blocks(cache["k"], payload["k"], sel, idx),
+        "v": _scatter_blocks(cache["v"], payload["v"], sel, idx),
+    }
+    if "k_scale" in cache:
+        out["k_scale"] = _scatter_blocks(
+            cache["k_scale"], payload["k_scale"], sel, idx
+        )
+        out["v_scale"] = _scatter_blocks(
+            cache["v_scale"], payload["v_scale"], sel, idx
+        )
     return out
 
 

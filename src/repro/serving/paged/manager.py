@@ -339,6 +339,74 @@ class PagedCacheManager:
         self.keys[slot][idx] = None
         return ("ready", None)
 
+    # ------------------------------------------------------------- migration
+    def export_slot(self, slot: int) -> tuple[list[int], list]:
+        """Detach ``slot``'s blocks for migration to a peer replica.
+
+        Returns ``(block_ids, keys)`` — the physical ids to gather
+        (``device.copy_blocks_out``) and the hash-key chain describing
+        them (the import ticket; None entries are diverged tails or
+        decode headroom).  The blocks are released pool-side via
+        :meth:`BlockPool.export_blocks` (shared-prefix blocks stay with
+        their remaining owners — copy-on-export), and the slot's
+        bookkeeping resets without the decrefs :meth:`free_slot` would
+        double-apply.  Callers must reject slots with a cold (host-tier)
+        prefix first: only device-resident sequences migrate.
+        """
+        if self.cold_blocks[slot]:
+            raise ValueError(f"slot {slot} has a cold host-tier prefix")
+        ids = list(self.blocks[slot])
+        keys = list(self.keys[slot])
+        self.pool.export_blocks(ids)
+        self.blocks[slot] = []
+        self.keys[slot] = []
+        self.tables[slot, :] = 0
+        self.admit_seq[slot] = -1
+        self._chunk_keys.pop(slot, None)
+        return ids, keys
+
+    def import_shortfall(self, keys: list, length: int) -> int:
+        """Fresh blocks an import of ``(keys, length)`` would allocate
+        right now (read-only mirror of :meth:`import_slot`'s capacity
+        check, including the decode-boundary headroom block)."""
+        keys = self._with_headroom(keys, length)
+        return sum(1 for k in keys if k is None or self.pool.peek(k) is None)
+
+    def _with_headroom(self, keys: list, length: int) -> list:
+        """Append the decode-boundary headroom key when the migrated KV
+        exactly fills its blocks and no block covers the append position —
+        mirroring ``try_admit``'s reservation so the destination's first
+        decode append never lands on a dry pool."""
+        bs = self.pool.block_size
+        keys = list(keys)
+        if (length % bs == 0 and len(keys) == length // bs
+                and len(keys) < self.max_blocks):
+            keys.append(None)
+        return keys
+
+    def import_slot(
+        self, slot: int, keys: list, length: int
+    ) -> tuple[list[int], list[bool]] | None:
+        """Land a migrating sequence in ``slot``: allocate/dedup blocks
+        for its key chain (:meth:`BlockPool.import_blocks`), reserve the
+        decode-boundary headroom block when needed, and install the block
+        table.  Returns ``(block_ids, needs_copy)`` aligned with the
+        *original* ``keys`` plus any trailing headroom block (headroom has
+        no payload column to copy), or ``None`` — nothing mutated — when
+        the pool cannot supply the fresh blocks."""
+        keys = self._with_headroom(keys, length)
+        res = self.pool.import_blocks(keys)
+        if res is None:
+            return None
+        ids, needs = res
+        self.blocks[slot] = list(ids)
+        self.keys[slot] = list(keys)
+        self.tables[slot, :] = 0
+        self.tables[slot, :len(ids)] = ids
+        self.admit_seq[slot] = self._counter
+        self._counter += 1
+        return ids, needs
+
     # ------------------------------------------------------------- teardown
     def free_slot(self, slot: int) -> None:
         for b in self.blocks[slot]:

@@ -225,9 +225,13 @@ class RequestTree:
         queued = self.child("queued")
         chunks = self.child("prefill_chunk")
         decodes = self.child("decode")
-        if not queued:
+        # A request migrated onto this replica (disaggregated serving)
+        # was queued, chunked, admitted and produced its first token on
+        # the *source* replica — its history here starts mid-decode.
+        migrated_in = bool(self.marks("kv_migrate_in"))
+        if not queued and not migrated_in:
             p.append(f"{uid}: no queued span")
-        if not chunks:
+        if not chunks and not migrated_in:
             p.append(f"{uid}: no prefill_chunk span")
         for s in self.spans:
             if s.closed and s.end < s.start:
@@ -254,10 +258,10 @@ class RequestTree:
                 p.append(f"{uid}: chunk positions regressed at {start}")
             pos = start
         admits = self.marks("admitted")
-        if not admits:
+        if not admits and not migrated_in:
             p.append(f"{uid}: no admitted event")
         first = self.marks("first_token")
-        if self.finished and not first:
+        if self.finished and not first and not migrated_in:
             p.append(f"{uid}: finished request has no first_token event")
         if first and admits and first[0].step < admits[0].step:
             p.append(f"{uid}: first_token before admission")

@@ -126,7 +126,7 @@ class MetricsRegistry:
 _ENGINE_COUNTERS = (
     "prefills", "prefill_chunks", "boundary_packs", "decode_steps",
     "engine_steps", "generated", "preemptions", "victim_drains",
-    "spills", "rehydrations",
+    "spills", "rehydrations", "migrations_out", "migrations_in",
 )
 
 
@@ -163,9 +163,13 @@ def cluster_registry(cstats) -> MetricsRegistry:
     reg.counter("kv_rehydrations").inc(cstats.kv_rehydrations)
     reg.counter("prefix_hit_tokens").inc(cstats.prefix_hit_tokens)
     reg.counter("probed_tokens").inc(cstats.probed_tokens)
+    reg.counter("migrations").inc(cstats.migrations)
+    reg.counter("refold_moves").inc(cstats.refold_moves)
     reg.gauge("tokens_per_round").set(cstats.tokens_per_round)
     reg.gauge("mean_queue_wait_rounds").set(cstats.mean_queue_wait_rounds)
     reg.gauge("mean_ttft_steps").set(cstats.mean_ttft_steps)
+    reg.gauge("mean_ttft_rounds").set(cstats.mean_ttft_rounds)
+    reg.histogram("ttft_rounds").extend(cstats.ttft_rounds_samples)
     reg.gauge("prefix_hit_rate").set(cstats.prefix_hit_rate)
     reg.gauge("load_imbalance").set(cstats.load_imbalance)
     ttft = reg.histogram("ttft_steps")
@@ -178,4 +182,7 @@ def cluster_registry(cstats) -> MetricsRegistry:
         )
         reg.counter(f"replica{r.replica}_routed").inc(r.routed)
         reg.counter(f"replica{r.replica}_generated").inc(r.engine.generated)
+        reg.gauge(f"replica{r.replica}_role").set(
+            ("mixed", "prefill", "decode").index(r.role)
+        )
     return reg

@@ -29,6 +29,13 @@ the per-dispatch timeline, :data:`TRACK_ROUTER` on the cluster row for
 routing decisions).  ``repro.serving.telemetry.export`` turns these into
 one Perfetto/Chrome-trace track per replica slot.
 
+Disaggregated serving splits one request's history across replicas:
+``on_migrate`` closes the source replica's spans and drops paired
+``kv_migrate`` / ``kv_migrate_in`` instant marks (``on_refold_move``
+likewise for re-placed preemptees), so a migrated request renders as
+two half-trees joined by the marks — trace validation treats the marks
+as the join key.
+
 Zero-cost when disabled: engines default to :data:`NULL_TRACER`, whose
 hooks are no-ops and whose ``enabled = False`` lets the engine skip even
 building the per-dispatch :class:`~repro.serving.telemetry.timeline.StepRecord`.
@@ -89,6 +96,9 @@ class _RequestState:
     queued: Span | None = None
     decode: Span | None = None
     finished: bool = False
+    # request arrived by KV migration: its queued/prefill history lives
+    # on the source replica's state (well-formedness checks adapt)
+    migrated_in: bool = False
 
 
 class NullTracer:
@@ -131,6 +141,13 @@ class NullTracer:
         pass
 
     def on_route(self, uid, replica, policy, rank_pos, hit_tokens, probed):
+        pass
+
+    def on_migrate(self, req, src_replica, src_step, src_slot,
+                   dst_replica, dst_step, dst_slot, n_blocks):
+        pass
+
+    def on_refold_move(self, req, src_replica, dst_replica):
         pass
 
     def wall(self):
@@ -285,6 +302,63 @@ class Tracer:
         self._event(-1, TRACK_ROUTER, uid, "route", self.round,
                     chosen=replica, policy=policy, spill=rank_pos > 0,
                     rank_pos=rank_pos, hit_tokens=hit_tokens, probed=probed)
+
+    # ------------------------------------------------------------- migration
+    def on_migrate(self, req, src_replica: int, src_step: int, src_slot: int,
+                   dst_replica: int, dst_step: int, dst_slot: int,
+                   n_blocks: int) -> None:
+        """A resident request's KV migrated between replicas (the
+        disaggregated prefill->decode handoff).  The source's decode span
+        closes (``migrated=True``), a fresh decode span opens on the
+        destination's clock, and three markers land: ``kv_migrate_out``
+        on the source slot row, ``kv_migrate_in`` on the destination slot
+        row, and the cluster-level ``kv_migrate`` mark on the router row
+        (the one CI's ``--expect-migrate-marks`` counts)."""
+        src = self._state(src_replica, req)
+        if src.decode is not None and not src.decode.closed:
+            src.decode.end = src_step
+            src.decode.t_end = self.wall()
+            src.decode.attrs["migrated"] = True
+            src.decode.attrs["dst_replica"] = dst_replica
+        src.decode = None
+        self._event(src_replica, src_slot, req.uid, "kv_migrate_out",
+                    src_step, dst=dst_replica, blocks=n_blocks)
+        key = (dst_replica, req.uid)
+        dst = self.requests.get(key)
+        if dst is None:
+            dst = _RequestState(uid=req.uid, replica=dst_replica,
+                                submit_step=dst_step,
+                                prompt_len=len(req.prompt))
+            self.requests[key] = dst
+        dst.migrated_in = True
+        dst.decode = Span(replica=dst_replica, track=dst_slot, uid=req.uid,
+                          name="decode", start=dst_step, t_start=self.wall(),
+                          attrs={"migrated_in": True, "src_replica": src_replica})
+        self.spans.append(dst.decode)
+        self._event(dst_replica, dst_slot, req.uid, "kv_migrate_in",
+                    dst_step, src=src_replica, blocks=n_blocks)
+        self._event(-1, TRACK_ROUTER, req.uid, "kv_migrate", self.round,
+                    src=src_replica, dst=dst_replica, blocks=n_blocks)
+
+    def on_refold_move(self, req, src_replica: int, dst_replica: int) -> None:
+        """A preempted request's refold re-placed off its home replica
+        (router-driven refold placement), marked on the router row."""
+        self._event(-1, TRACK_ROUTER, req.uid, "refold_move", self.round,
+                    src=src_replica, dst=dst_replica)
+        # the request now queues on the destination: close any open
+        # queued span at home and open one there
+        src = self._state(src_replica, req)
+        if src.queued is not None and not src.queued.closed:
+            src.queued.end = src.queued.start
+            src.queued.t_end = self.wall()
+            src.queued.attrs["moved"] = True
+        src.queued = None
+        dst = self._state(dst_replica, req)
+        dst.migrated_in = True
+        dst.queued = Span(replica=dst_replica, track=TRACK_QUEUE, uid=req.uid,
+                          name="queued", start=req.submit_step,
+                          t_start=self.wall(), attrs={"refold_move": True})
+        self.spans.append(dst.queued)
 
     # ---------------------------------------------------------- introspection
     def replicas(self) -> list[int]:

@@ -1,0 +1,309 @@
+"""Disaggregated prefill/decode serving: role parsing and router role
+filtering, 1P+1D greedy equivalence with a single mixed engine across
+cache/schedule/async combos, and the KV block-migration edge cases —
+shared-prefix export leaves the source's refcounts and hash entries
+intact, importing into a full pool spills to the host tier instead of
+preempting, fp8 migration moves quantized blocks and their scale pools
+bit-exactly, and router-driven refold moves reproduce the preempted
+request's decode exactly on its new replica."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.reduced import reduce_config
+from repro.core.placement import Env
+from repro.models.registry import build_model
+from repro.serving.cluster import Cluster, Router, parse_roles
+from repro.serving.engine import Engine, EngineLoad, Request
+from repro.serving.paged import device as paged_dev
+from repro.serving.telemetry import Tracer
+from repro.serving.telemetry.export import build_request_trees
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = reduce_config("llama3.2-1b")
+    model = build_model(cfg, Env())
+    return model, model.init(jax.random.key(0))
+
+
+PROMPTS = [np.arange(1, 6, dtype=np.int32),
+           np.arange(7, 10, dtype=np.int32),
+           np.arange(2, 13, dtype=np.int32),
+           np.arange(2, 13, dtype=np.int32),      # shared prefix (paged)
+           np.arange(4, 25, dtype=np.int32)]      # multi-chunk
+
+
+def _run_single(model, params, prompts, n_new=5, **kw):
+    eng = Engine(model, params, n_slots=4, max_seq=32, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [list(r.out_tokens) for r in reqs]
+
+
+def _run_disagg(model, params, prompts, roles="1p+1d", n_new=5, tracer=None,
+                **kw):
+    cl = Cluster(model, params, 2, roles=roles, tracer=tracer,
+                 n_slots=4, max_seq=32, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=n_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        cl.submit(r)
+    stats = cl.run()
+    return [list(r.out_tokens) for r in reqs], stats, cl
+
+
+# -------------------------------------------------------------- role parsing
+def test_parse_roles():
+    assert parse_roles(None, 3) == ["mixed"] * 3
+    assert parse_roles("1p+1d", 2) == ["prefill", "decode"]
+    assert parse_roles("2P+1D+1M", 4) == ["prefill", "prefill", "decode",
+                                          "mixed"]
+    assert parse_roles("prefill, decode", 2) == ["prefill", "decode"]
+    assert parse_roles(["mixed", "mixed"], 2) == ["mixed", "mixed"]
+
+
+@pytest.mark.parametrize("spec,n", [
+    ("1p+1d", 3),                   # wrong length
+    ("prefill,banana", 2),          # unknown role
+    ("decode,decode", 2),           # nothing can admit
+    ("prefill,prefill", 2),         # nowhere to migrate
+    ("mixed,decode", 2),            # decode with no prefill source
+])
+def test_parse_roles_rejects(spec, n):
+    with pytest.raises(ValueError):
+        parse_roles(spec, n)
+
+
+# ---------------------------------------------------------- router filtering
+class _FakeEngine:
+    def __init__(self, inflight=0):
+        self.inflight = inflight
+
+    def can_admit(self, req):
+        return True
+
+    def probe_prefix(self, prompt):
+        return 0
+
+    def load(self):
+        return EngineLoad(free_slots=1, queued=0,
+                          inflight_tokens=self.inflight, free_blocks=None)
+
+
+def test_router_role_filtering():
+    engines = [_FakeEngine(10), _FakeEngine(0), _FakeEngine(5)]
+    r = Router(engines, "least_loaded", roles=["prefill", "decode", "mixed"])
+    req = Request(uid=0, prompt=np.arange(1, 4, dtype=np.int32),
+                  max_new_tokens=2)
+    # admission never ranks the decode replica; decode ranking never
+    # includes the prefill replica; both orders are least-loaded first
+    assert r.rank(req) == [2, 0]
+    assert r.rank_decode() == [1, 2]
+    assert r.rank_decode(exclude=1) == [2]
+    assert r.rank_refold() == [2, 0]
+    assert r.route(req) == 2
+
+    with pytest.raises(ValueError):
+        Router(engines, "round_robin", roles=["decode", "decode", "decode"])
+
+
+# ------------------------------------------------------------- equivalence
+@pytest.mark.parametrize("kw", [
+    dict(cache_kind="dense", async_mode=True),
+    dict(cache_kind="paged", block_size=4, async_mode=False),
+    dict(cache_kind="paged", block_size=4, async_mode=True),
+    dict(cache_kind="paged", block_size=4, schedule="hybrid",
+         prefill_chunk=4, async_mode=False),
+    dict(cache_kind="paged", block_size=4, schedule="hybrid",
+         prefill_chunk=4, async_mode=True),
+], ids=["dense-async", "paged-sync", "paged-async", "hybrid-sync",
+        "hybrid-async"])
+def test_disagg_greedy_equivalence(model_params, kw):
+    """1P+1D greedy outputs are token-identical to a single mixed engine:
+    migration moves work, never changes it."""
+    model, params = model_params
+    ref = _run_single(model, params, PROMPTS, **kw)
+    got, stats, _ = _run_disagg(model, params, PROMPTS, **kw)
+    assert got == ref
+    assert stats.migrations > 0
+    # every request prefilled on the prefill replica, decoded on decode
+    assert stats.replicas[0].routed == len(PROMPTS)
+    assert stats.replicas[1].routed == 0
+
+
+def test_disagg_trace_marks(model_params):
+    """A traced disaggregated run emits cluster-row kv_migrate marks and
+    every folded request tree stays well-formed (migrated-in histories
+    legitimately start mid-decode)."""
+    model, params = model_params
+    tracer = Tracer()
+    _, stats, _ = _run_disagg(model, params, PROMPTS, tracer=tracer,
+                              cache_kind="paged", block_size=4)
+    marks = [e for e in tracer.events if e.name == "kv_migrate"]
+    assert len(marks) == stats.migrations > 0
+    problems = [p for t in build_request_trees(tracer).values()
+                for p in t.well_formed()]
+    assert problems == []
+
+
+# --------------------------------------------------------- migration edges
+def test_shared_prefix_export_keeps_source_intact(model_params):
+    """Copy-on-export: exporting one of two prefix-sharing requests
+    decrefs the shared blocks but leaves the other owner's blocks and
+    their hash registrations untouched — its decode continues exactly."""
+    model, params = model_params
+    prompt = np.arange(2, 14, dtype=np.int32)      # 12 tokens = 3 blocks
+    solo = _run_single(model, params, [prompt], n_new=6,
+                       cache_kind="paged", block_size=4, async_mode=False)
+
+    eng = Engine(model, params, n_slots=2, max_seq=32, cache_kind="paged",
+                 block_size=4, async_mode=False)
+    reqs = [Request(uid=i, prompt=prompt, max_new_tokens=6) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                                     # both admitted + 1 token
+    blocks0 = [b for b in eng.manager.blocks[0] if b]
+    shared = [b for b in blocks0 if eng.pool.refcount(b) > 1]
+    assert shared, "prefix blocks were not shared before export"
+
+    exported = eng.export_request(1)
+    assert exported is not None
+    req1, ticket, _ = exported
+    assert ticket.n_blocks > 0
+    assert eng.stats.migrations_out == 1
+    # the remaining owner's blocks survive with their hash entries intact
+    for b, k in zip(eng.manager.blocks[0], eng.manager.keys[0]):
+        if b and k is not None:
+            assert eng.pool.refcount(b) >= 1
+            assert eng.pool.peek(k) == b
+    eng.run()
+    assert list(reqs[0].out_tokens) == solo[0]
+
+
+def test_import_into_full_pool_spills_not_preempts(model_params):
+    """Import under block pressure with a host tier: the destination
+    spills resident cold-prefix blocks host-ward to make room — nobody
+    is preempted, and both the resident and the migrated request finish
+    with unchanged greedy outputs."""
+    model, params = model_params
+    p_res = np.arange(3, 19, dtype=np.int32)       # 16 tokens = 4 blocks
+    p_mig = np.arange(5, 21, dtype=np.int32)
+    kw = dict(cache_kind="paged", block_size=4, async_mode=False)
+    solo_res = _run_single(model, params, [p_res], n_new=6, **kw)
+    solo_mig = _run_single(model, params, [p_mig], n_new=6, **kw)
+
+    src = Engine(model, params, n_slots=1, max_seq=32, **kw)
+    mig = Request(uid=1, prompt=p_mig, max_new_tokens=6)
+    src.submit(mig)
+    src.step()
+    exported = src.export_request(0)
+    assert exported is not None
+    req, ticket, payload = exported
+
+    # 8 usable blocks: the resident sequence holds 5 after one decode
+    # append, so the 5-block import cannot fit without the host tier
+    dst = Engine(model, params, n_slots=2, max_seq=32, n_blocks=9,
+                 host_blocks=8, **kw)
+    res = Request(uid=0, prompt=p_res, max_new_tokens=6)
+    dst.submit(res)
+    dst.step()
+    fresh = dst.manager.import_shortfall(ticket.keys, ticket.length)
+    assert fresh > dst.pool.free_count, "setup: pool is not actually full"
+
+    slot = dst.import_request(req, ticket, payload)
+    assert slot is not None
+    assert dst.stats.preemptions == 0
+    assert dst.pool.stats.spills > 0
+    dst.run()
+    assert dst.stats.preemptions == 0
+    assert list(res.out_tokens) == solo_res[0]
+    assert list(mig.out_tokens) == solo_mig[0]
+
+
+def test_fp8_migration_bit_exact(model_params):
+    """Same-tier fp8 migration is a raw storage-dtype copy: quantized
+    payload blocks and their scale tiles land bit-identical on the
+    destination (no dequant/requant round trip)."""
+    model, params = model_params
+    prompt = np.arange(2, 14, dtype=np.int32)
+    kw = dict(cache_kind="paged", block_size=4, kv_dtype="fp8",
+              async_mode=False)
+    solo = _run_single(model, params, [prompt], n_new=6, **kw)
+
+    src = Engine(model, params, n_slots=1, max_seq=32, **kw)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=6)
+    src.submit(req)
+    src.step()
+    exported = src.export_request(0)
+    assert exported is not None
+    req, ticket, payload = exported
+
+    dst = Engine(model, params, n_slots=1, max_seq=32, **kw)
+    slot = dst.import_request(req, ticket, payload)
+    assert slot is not None
+    ids = [b for b in dst.manager.blocks[slot] if b][:ticket.n_blocks]
+    landed = paged_dev.copy_blocks_out(dst.cache, ids)
+    for name in ("k", "v", "k_scale", "v_scale"):
+        a, b = payload[name], landed[name]
+        assert a.dtype == b.dtype
+        # fp8 bit pattern compare (== on fp8 NaNs would mask a mismatch)
+        assert jnp.array_equal(
+            jax.lax.bitcast_convert_type(a, jnp.uint8),
+            jax.lax.bitcast_convert_type(b, jnp.uint8),
+        ), f"{name} pool changed across migration"
+    dst.run()
+    assert list(req.out_tokens) == solo[0]
+
+
+def test_dtype_mismatch_refuses_migration(model_params):
+    """can_import refuses a ticket whose kv_dtype differs — migration is
+    a storage-dtype copy, never a requantization."""
+    model, params = model_params
+    src = Engine(model, params, n_slots=1, max_seq=32, cache_kind="paged",
+                 block_size=4, kv_dtype="fp8", async_mode=False)
+    req = Request(uid=0, prompt=PROMPTS[0], max_new_tokens=4)
+    src.submit(req)
+    src.step()
+    ticket = src.preview_export(0)
+    assert ticket is not None
+    dst = Engine(model, params, n_slots=1, max_seq=32, cache_kind="paged",
+                 block_size=4, kv_dtype="bf16", async_mode=False)
+    assert not dst.can_import(ticket)
+
+
+def test_refold_move_reproduces_decode(model_params):
+    """Router-driven refold placement: a preempted request stranded at a
+    busy replica's queue front refolds on the least-loaded replica and
+    continues its greedy decode exactly."""
+    model, params = model_params
+    kw = dict(cache_kind="paged", block_size=4, async_mode=False)
+    prompt = np.arange(2, 14, dtype=np.int32)
+    solo = _run_single(model, params, [prompt], n_new=6, **kw)
+
+    cl = Cluster(model, params, 2, n_slots=1, max_seq=32, **kw)
+    blocker = Request(uid=0, prompt=PROMPTS[4], max_new_tokens=8)
+    cl.submit(blocker)
+    cl.step()                                      # occupies r0's only slot
+    assert cl.engines[0].slots[0] is blocker
+
+    # a preempted request: one token already generated, waiting at r0
+    refold = Request(uid=1, prompt=prompt, max_new_tokens=6)
+    refold.out_tokens.append(solo[0][0])
+    refold.first_token_step = 1
+    cl.engines[0].sched.push_front(refold)
+    assert not cl.engines[0].can_admit_next()
+
+    moved = cl._rebalance_refolds()
+    assert moved == 1
+    assert cl.refold_moves == 1
+    assert cl.placement[1] == 1
+    assert cl.engines[1].sched.peek() is refold
+    cl.run()
+    assert list(refold.out_tokens) == solo[0]
+    assert list(blocker.out_tokens) == _run_single(
+        model, params, [PROMPTS[4]], n_new=8, **kw)[0]
