@@ -23,6 +23,10 @@ them against the committed ``benchmarks/baseline.json``:
 * ``disagg_ttft_gain`` — mixed over prefill/decode-disaggregated mean
   end-to-end TTFT in cluster rounds at equal capacity (deterministic
   round counting; must stay >= 1, i.e. disaggregation never hurts);
+* ``spec_decode_gain`` — depth-2 speculative vs non-speculative decode
+  tokens per engine step under the target-as-draft acceptance ceiling
+  (deterministic step counting; the bench itself asserts the 1.2x
+  floor, the gate catches regressions from the committed baseline);
 * ``kernel_decode_err`` — the decode-attention kernel smoke row's max
   abs err vs the jnp oracle, with an 8x band: only a genuine numeric
   divergence (a real kernel bug is many orders of magnitude) trips it.
@@ -55,7 +59,7 @@ from benchmarks import run as bench_run
 # benches whose returned metrics dicts are merged (flat, keys disjoint)
 # into the gated set; everything else still runs for its own asserts
 GATED_BENCHES = ("scheduler_bench", "paged_bench", "kernel_bench",
-                 "cluster_bench")
+                 "cluster_bench", "spec_bench")
 
 # metric -> (direction that counts as an improvement, tolerance multiplier).
 # Deterministic counts (engine steps, rounds, eval_shape arithmetic) get
@@ -77,6 +81,7 @@ GATED = {
     "cluster_speedup_2r": ("higher", 1.0),
     "affinity_hit_rate": ("higher", 1.0),
     "disagg_ttft_gain": ("higher", 1.0),
+    "spec_decode_gain": ("higher", 1.0),
     "kernel_decode_err": ("lower", 8.0),
 }
 

@@ -8,6 +8,7 @@
   kernel_bench     —           Pallas kernels vs oracle (interpret mode)
   paged_bench      —           dense vs paged KV capacity + live equivalence
   scheduler_bench  —           decode-only vs hybrid TTFT, sync vs async
+  spec_bench       —           speculative decode gain vs depth + acceptance
   cluster_bench    —           replica scale-out + prefix-affinity routing
 
 ``python -m benchmarks.run [--smoke] [name ...]`` — default runs
@@ -36,6 +37,7 @@ from benchmarks import (
     paged_bench,
     roofline_table,
     scheduler_bench,
+    spec_bench,
 )
 
 ALL = {
@@ -47,6 +49,7 @@ ALL = {
     "kernel_bench": kernel_bench.main,
     "paged_bench": paged_bench.main,
     "scheduler_bench": scheduler_bench.main,
+    "spec_bench": spec_bench.main,
     "cluster_bench": cluster_bench.main,
 }
 

@@ -20,7 +20,8 @@ from repro.serving.telemetry import validate_trace
 
 
 def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False,
-          expect_migrate_marks: bool = False) -> list[str]:
+          expect_migrate_marks: bool = False,
+          expect_spec_marks: bool = False) -> list[str]:
     """Return problem strings (empty = the trace passes the smoke bar)."""
     problems = validate_trace(obj)
     if problems:
@@ -30,6 +31,8 @@ def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False,
     finishes: dict[int, set[int]] = defaultdict(set)
     n_spills = 0
     n_migrates = 0
+    n_proposes = 0
+    n_verifies = 0
     for e in events:
         args = e.get("args", {})
         if e["ph"] == "X" and e["name"].startswith("decode") and e["dur"] >= 0:
@@ -40,8 +43,20 @@ def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False,
             n_spills += 1
         if e["ph"] == "i" and e["name"] == "kv_migrate":
             n_migrates += 1
+        if e["ph"] == "i" and e["name"] == "spec_propose":
+            n_proposes += 1
+        if e["ph"] == "i" and e["name"] == "spec_verify":
+            n_verifies += 1
     if expect_spill_marks and n_spills == 0:
         problems.append("no kv_spill marks (host-tier smoke expected >= 1)")
+    if expect_spec_marks and n_proposes == 0:
+        problems.append(
+            "no spec_propose marks (speculative smoke expected >= 1)"
+        )
+    if expect_spec_marks and n_verifies == 0:
+        problems.append(
+            "no spec_verify marks (speculative smoke expected >= 1)"
+        )
     if expect_migrate_marks and n_migrates == 0:
         problems.append(
             "no kv_migrate marks (disaggregated smoke expected >= 1)"
@@ -83,6 +98,10 @@ def main(argv: list[str] | None = None) -> int:
                          "the complete-span requirement from per-replica "
                          "to global, since prefill-role replicas migrate "
                          "requests away before they finish")
+    ap.add_argument("--expect-spec-marks", action="store_true",
+                    help="require at least one spec_propose and one "
+                         "spec_verify instant event (the speculative "
+                         "decoding serve smoke)")
     args = ap.parse_args(argv)
     try:
         obj = json.loads(open(args.trace).read())
@@ -90,7 +109,7 @@ def main(argv: list[str] | None = None) -> int:
         print(f"cannot read trace {args.trace}: {e}", file=sys.stderr)
         return 1
     problems = check(obj, args.replicas, args.expect_spill_marks,
-                     args.expect_migrate_marks)
+                     args.expect_migrate_marks, args.expect_spec_marks)
     if problems:
         print(f"trace check FAILED for {args.trace}:", file=sys.stderr)
         for p in problems:

@@ -180,6 +180,45 @@ def mla_decode_attention(
     return out
 
 
+def verify_attention(
+    env: Env,
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Multi-position draft-verify attention through the HPU layout.
+
+    q (B, T, Hq, D) scores T speculative positions per slot against the
+    live cache (B, S, Hkv, D); query ``t`` of slot ``b`` sits at absolute
+    position ``lengths[b] + t`` (its K/V must already be written there).
+    This is the decode-side twin of :func:`prefill_attention`'s
+    ``q_offset`` continuation, generalized to *per-slot* offsets — the
+    GEMM-shaped pass that lets one weight stream verify ``T`` tokens.
+
+    The serving engine's verify path deliberately does NOT use this:
+    greedy speculation must be bitwise token-identical to plain
+    decoding, and this differently-shaped program rounds bf16 logits
+    differently than the per-token decode attention, flipping argmax on
+    near-ties — so ``dense.verify_step`` unrolls per-position decode
+    passes instead.  Kept as the batched pass for future tree/batch
+    verification where sampling absorbs the rounding.  No Pallas kernel:
+    T is tiny, so the exact jnp flash path is used on every backend.
+    """
+    if env.axes and env.offload == "hpu":
+        q = _wsc(q, env.kv_spec(("kv_batch", None, "kv_heads", "head_dim"), q.shape))
+        k_cache, v_cache = constrain_cache(env, k_cache, v_cache)
+    out = attn.chunked_attention(
+        q, k_cache, v_cache, causal=True, q_offset=lengths, scale=scale, chunk=chunk
+    )
+    if env.axes and env.offload == "hpu":
+        out = _wsc(out, env.act_spec(("batch", "seq", "heads", "head_dim"), out.shape))
+    return out
+
+
 def prefill_attention(
     env: Env,
     q: jax.Array,

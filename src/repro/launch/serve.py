@@ -27,6 +27,14 @@ fallback (greedy outputs are token-identical either way).  Sampling is
 picked with ``--sample {greedy,temperature,top-k}`` plus
 ``--temperature`` / ``--top-k`` values.
 
+``--spec-depth K`` turns on speculative multi-token decoding: a
+reduced-scale draft model (``--draft ARCH``, default a reduced variant
+of ``--arch``) proposes K tokens per decode slot each step and the
+target verifies all K+1 positions in one fused pass, committing the
+accepted prefix device-to-device.  Greedy outputs are token-identical
+to non-speculative serving; with temperature, rejection sampling keeps
+every emitted token an exact sample from the target distribution.
+
 Add ``--replicas N [--route round_robin|least_loaded|prefix_affinity]``
 to serve from a :class:`~repro.serving.cluster.Cluster` of N engine
 replicas behind a shared global queue: the router places each request on
@@ -118,6 +126,15 @@ def main():
     ap.add_argument("--token-budget", type=int, default=None,
                     help="hybrid: per-step token budget "
                          "(default: slots + prefill_chunk)")
+    ap.add_argument("--spec-depth", type=int, default=0,
+                    help="speculative decoding: draft tokens proposed per "
+                         "decode step (0 = off); each step verifies k+1 "
+                         "positions in one fused target pass")
+    ap.add_argument("--draft", default=None, metavar="ARCH",
+                    help="draft model architecture for --spec-depth > 0 "
+                         "(default: a reduced-config variant of --arch; "
+                         "always instantiated at reduced scale so the "
+                         "draft stays cheap relative to the target)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind the shared global queue")
     ap.add_argument("--route", choices=ROUTE_POLICIES, default="round_robin",
@@ -171,6 +188,16 @@ def main():
         token_budget=args.token_budget,
         async_mode=args.async_mode == "on",
     )
+    if args.spec_depth:
+        # the draft shares the target's tokenizer/vocab but runs at
+        # reduced scale — proposal cost stays small next to the verify
+        draft_cfg = reduce_config(args.draft or args.arch, vocab=cfg.vocab)
+        draft_model = build_model(draft_cfg, env)
+        engine_kw.update(
+            spec_depth=args.spec_depth,
+            draft_model=draft_model,
+            draft_params=draft_model.init(jax.random.key(1)),
+        )
     tracer = Tracer(wall=True) if args.trace else None
     roles = parse_roles(args.role_map, args.replicas) if args.role_map else None
     role_kw = ({"decode": {"n_slots": args.decode_slots}}
@@ -243,6 +270,12 @@ def main():
               f"decode_steps={stats.decode_steps} "
               f"engine_steps={stats.engine_steps} "
               f"generated={stats.generated} peak_active={stats.peak_active}")
+        if args.spec_depth:
+            print(f"spec: depth={args.spec_depth} "
+                  f"accept_rate={stats.acceptance_rate:.2f} "
+                  f"drafted={stats.drafted_tokens} "
+                  f"accepted={stats.accepted_tokens} "
+                  f"spec_steps={stats.spec_steps}")
         print(f"latency: TTFT mean {snap['mean_ttft_steps']:.1f} "
               f"p50 {snap['ttft_steps_p50']:.0f} "
               f"p99 {snap['ttft_steps_p99']:.0f} engine steps, "

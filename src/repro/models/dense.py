@@ -523,6 +523,116 @@ def prefill_step(cfg, env: Env, params, cache, tokens, slot, q_offset, n_valid):
 
 
 # ---------------------------------------------------------------------------
+# speculative verify (draft-verify decoding; serving/engine.py)
+# ---------------------------------------------------------------------------
+def verify_step(cfg, env: Env, params, cache, tokens):
+    """Score T speculative tokens per slot against the live cache in one
+    dispatched program.
+
+    ``tokens`` (B, T) are each slot's next inputs ``[t0, d_1 .. d_{T-1}]``
+    (the fed-back token followed by draft proposals); input ``t`` of slot
+    ``b`` lands at absolute cache position ``lengths[b] + t``.  K/V for
+    all T positions are written unconditionally — rejected tails are
+    garbage *past* the committed length, causally invisible, and
+    overwritten by whatever writes those positions next — and ``lengths``
+    is returned unchanged: the caller commits the accepted prefix by
+    setting ``lengths + n_accept + 1`` (the KV "rollback" is just not
+    advancing past it).  Returns logits (B, T, V), position ``t`` scoring
+    the successor of input ``t``, and the updated cache.
+
+    Internally this is T statically-unrolled :func:`decode_step` passes
+    — the *same* arithmetic, op for op, as non-speculative decoding —
+    NOT one T-wide attention GEMM.  That choice is deliberate: greedy
+    speculative serving must be token-identical to the plain engine, and
+    a differently-shaped attention program (batched verify vs per-token
+    decode) rounds bf16 logits differently, flipping argmax near ties.
+    The speculative win this repo measures is dispatch-count (one
+    program, one host round-trip, one scheduler step per k+1 tokens);
+    the weights still stream T times within the program.
+    """
+    if cfg.kv_quant:
+        raise NotImplementedError("verify_step does not support kv_quant yet")
+    lengths = cache["lengths"]
+    T = tokens.shape[1]
+    step = {"k": cache["k"], "v": cache["v"], "lengths": lengths}
+    logits = []
+    for t in range(T):
+        lg, step = decode_step(cfg, env, params, step, tokens[:, t])
+        logits.append(lg)
+    return jnp.stack(logits, axis=1), {
+        "k": step["k"], "v": step["v"], "lengths": lengths,
+    }
+
+
+def paged_verify_step(cfg, env: Env, params, cache, tokens):
+    """Paged-pool analogue of :func:`verify_step`: T statically-unrolled
+    :func:`paged_decode_step`-equivalent passes in one dispatched program
+    — the same arithmetic, op for op, as non-speculative paged decoding
+    (see :func:`verify_step` for why bitwise-identical decode math is
+    load-bearing for greedy serving).
+
+    One addressing difference from the plain decode body: a position past
+    the block table (speculative overshoot at the cache edge) is routed
+    to the null block 0, the pool's designated garbage sink.  Plain
+    decode can never append out of table (the engine finishes or preempts
+    first), but a verify window writes k+1 positions ahead of the
+    committed length, so the edge is reachable and a clamped gather would
+    otherwise silently corrupt a live block.  Quantized pools and the
+    host tier are not supported under speculation (the engine validates).
+    """
+    if _kv_dtype_name(cache["k"].dtype):
+        raise NotImplementedError("paged_verify_step: quantized pools unsupported")
+    if "host_k" in cache:
+        raise NotImplementedError("paged_verify_step: host KV tier unsupported")
+    lengths0 = cache["lengths"]         # (B,)
+    tables = cache["block_tables"]      # (B, max_blocks) int32
+    bs = cache["k"].shape[3]
+    max_blocks = tables.shape[1]
+    B, T = tokens.shape
+    bidx = jnp.arange(B)
+    k_pool, v_pool = cache["k"], cache["v"]
+    lengths = lengths0
+    logits = []
+    for t in range(T):
+        x = cm.embed_lookup(params["embed"], tokens[:, t])  # (B, D)
+        pos = lengths[:, None]
+        blk = lengths // bs
+        phys = jnp.where(blk < max_blocks,
+                         tables[bidx, jnp.minimum(blk, max_blocks - 1)], 0)
+        off = lengths % bs
+
+        def scan_body(xc, xs, pos=pos, phys=phys, off=off, lengths=lengths):
+            p, k_l, v_l = xs            # pools (n_blocks, Hkv, bs, Dh)
+            h = cm.rmsnorm(xc, p["ln1"], cfg.norm_eps)
+            q = jnp.einsum("bd,dhk->bhk", h, p["wq"])
+            k = jnp.einsum("bd,dhk->bhk", h, p["wk"])
+            v = jnp.einsum("bd,dhk->bhk", h, p["wv"])
+            q = cm.rope(q[:, None], pos, cfg.rope_theta)[:, 0]
+            k = cm.rope(k[:, None], pos, cfg.rope_theta)[:, 0]
+            # advanced indices (phys, off) straddle the head slice, so
+            # the selected (B, Hkv, Dh) lands batch-first — matching k/v
+            k_l = k_l.at[phys, :, off].set(k.astype(k_l.dtype))
+            v_l = v_l.at[phys, :, off].set(v.astype(v_l.dtype))
+            o = offload.paged_decode_attention(
+                env, q, k_l, v_l, tables, lengths + 1
+            )
+            xc = xc + jnp.einsum("bhk,hkd->bd", o, p["wo"])
+            h = cm.rmsnorm(xc, p["ln2"], cfg.norm_eps)
+            xc = xc + cm.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+            return xc, (k_l, v_l)
+
+        x, (k_pool, v_pool) = jax.lax.scan(
+            scan_body, x, (params["blocks"], k_pool, v_pool)
+        )
+        x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits.append(cm.unembed(x, _unembed_table(params), cfg.vocab))
+        lengths = lengths + 1
+    new_cache = dict(cache)
+    new_cache |= {"k": k_pool, "v": v_pool, "lengths": lengths0}
+    return jnp.stack(logits, axis=1), new_cache
+
+
+# ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
 def decode_step(cfg, env: Env, params, cache, tokens):

@@ -48,6 +48,14 @@ class Model:
     decode_sample_step: Callable[..., tuple[jax.Array, jax.Array, Pytree]] | None = None
     paged_decode_sample_step: Callable[..., tuple[jax.Array, jax.Array, Pytree]] | None = None
     prefill_sample_step: Callable[..., tuple[jax.Array, Pytree]] | None = None
+    # speculative draft-verify (serving/engine.py spec_depth > 0):
+    # verify_step(params, cache, tokens (B, T)) -> (logits (B, T, V), cache)
+    # scores T positions per slot against the live cache in one pass,
+    # writing their K/V but leaving `lengths` for the caller to commit.
+    # paged_verify_step is the block-pool twin.  None for families
+    # without multi-position scoring.
+    verify_step: Callable[[Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]] | None = None
+    paged_verify_step: Callable[[Pytree, Pytree, jax.Array], tuple[jax.Array, Pytree]] | None = None
 
     # ---- derived helpers -------------------------------------------------
     def init(self, rng: jax.Array) -> Pytree:
@@ -167,5 +175,14 @@ def build_model(cfg: ModelConfig, env: Env | None = None) -> Model:
         prefill_sample_step=(
             functools.partial(fam.prefill_sample_step, cfg, env)
             if hasattr(fam, "prefill_sample_step") else None
+        ),
+        # families opt into speculative verification by defining verify_step
+        verify_step=(
+            functools.partial(fam.verify_step, cfg, env)
+            if hasattr(fam, "verify_step") else None
+        ),
+        paged_verify_step=(
+            functools.partial(fam.paged_verify_step, cfg, env)
+            if hasattr(fam, "paged_verify_step") else None
         ),
     )

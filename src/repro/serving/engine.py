@@ -68,6 +68,27 @@ dispatches; a decode-only whole prefill of ``L`` tokens counts
 ``ceil(L / prefill_chunk)`` steps (the hybrid-batch units it occupies),
 so TTFT/throughput in steps are comparable across schedules.
 
+Speculative multi-token decoding (``spec_depth=k`` with a draft model):
+each decode dispatch becomes draft-then-verify — the small draft model
+proposes ``k`` tokens autoregressively on device, the target model scores
+all ``k+1`` positions in one fused ``verify_step`` (the chunked-prefill
+``q_offset`` scoring path generalized to per-slot offsets), and
+rejection sampling accepts a prefix of the drafts plus one
+bonus/correction token.  The accepted prefix feeds back device-to-device
+through the same ``tok_state`` plumbing; KV "rollback" is simply not
+advancing ``lengths`` past the accepted prefix (garbage K/V beyond the
+committed length is causally invisible and overwritten by later writes).
+Greedy output is token-identical to non-speculative decoding;
+temperature sampling matches the target distribution exactly (standard
+rejection/residual sampling).  Speculation always runs on the
+dispatch-ahead machinery — ``async_mode=False`` with ``spec_depth > 0``
+collapses to a pipeline of depth zero (dispatch, then observe
+immediately), which keeps one code path and stays greedy
+token-identical.  A speculative dispatch carries ``k+1`` in-flight
+token *charges* per slot (the router's load accounting sees the true
+KV commitment upper bound) but only one guaranteed commit
+(``in_flight_steps``), which is what dispatch prediction uses.
+
 Cross-replica migration (disaggregated serving): a paged request whose
 prefill just completed can leave this engine and continue decoding on
 another — :meth:`Engine.preview_export` sizes the move without side
@@ -94,7 +115,13 @@ from repro.models.registry import Model
 from repro.serving import kv_cache
 from repro.serving.paged import BlockPool, PagedCacheManager
 from repro.serving.paged import device as paged_dev
-from repro.serving.sampler import SamplerConfig, sample, sample_on_device
+from repro.serving.sampler import (
+    SamplerConfig,
+    sample,
+    sample_on_device,
+    spec_draft_sample,
+    spec_verify_tokens,
+)
 from repro.serving.scheduler import PrefillChunk, Scheduler
 from repro.serving.telemetry import (
     NULL_TRACER,
@@ -119,8 +146,13 @@ class Request:
     admit_step: int = -1
     first_token_step: int = -1
     finish_step: int = -1
-    # async engine bookkeeping
-    in_flight: int = 0              # tokens dispatched, not yet observed
+    # async engine bookkeeping.  One dispatched step carries one token
+    # charge normally; a speculative step carries spec_depth+1 charges
+    # (the commit upper bound, what KV/load accounting must cover) but
+    # guarantees only one commit — in_flight_steps counts the guaranteed
+    # floor, which is what dispatch prediction may rely on.
+    in_flight: int = 0              # token charges dispatched, not observed
+    in_flight_steps: int = 0        # dispatched steps (>= 1 commit each)
     admit_base: int = 0             # len(out_tokens) at last (re-)admission
 
 
@@ -139,6 +171,11 @@ class EngineStats:
     rehydrations: int = 0           # KV blocks copied host tier -> device
     migrations_out: int = 0         # resident requests exported to a peer
     migrations_in: int = 0          # resident requests imported from a peer
+    spec_steps: int = 0             # speculative draft-verify dispatches
+    draft_steps: int = 0            # draft-model steps (decode + prefill chunks)
+    drafted_tokens: int = 0         # draft proposals consumed by verification
+                                    # (windows masked past a finish don't count)
+    accepted_tokens: int = 0        # draft proposals accepted
     ttft_steps_sum: int = 0
     ttft_count: int = 0
     # raw per-request samples (ttft: submit->first-token in engine steps;
@@ -146,6 +183,13 @@ class EngineStats:
     # percentiles are exact, not reconstructed from sums
     ttft_samples: list[int] = dataclasses.field(default_factory=list)
     per_token_samples: list[float] = dataclasses.field(default_factory=list)
+    # per-observed-window acceptance fractions (accepted / spec_depth)
+    spec_accept_samples: list[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verifier accepted."""
+        return self.accepted_tokens / max(self.drafted_tokens, 1)
 
     @property
     def mean_ttft_steps(self) -> float:
@@ -227,6 +271,11 @@ class _PendingStep:
     pre_tok: jax.Array | None = None     # (1,) first token when work.last
     work2: PrefillChunk | None = None    # boundary-packed second chunk
     pre_tok2: jax.Array | None = None    # (1,) first token when work2.last
+    # speculative dispatch: tokens is (B, k+1) emitted rows, eos is None
+    # (EOS is found host-side while walking the accepted prefix), and
+    # each decode-batch request carried `charge` in-flight token charges
+    n_accept: jax.Array | None = None    # (B,) accepted-draft counts (device)
+    charge: int = 1                      # in-flight charges per batch slot
 
 
 class Engine:
@@ -248,6 +297,9 @@ class Engine:
         prefill_chunk: int = 32,
         token_budget: int | None = None,
         async_mode: bool = True,
+        spec_depth: int = 0,
+        draft_model: Model | None = None,
+        draft_params: Pytree | None = None,
         tracer=None,
         replica: int = 0,
         role: str = "mixed",
@@ -260,6 +312,54 @@ class Engine:
         self.schedule = schedule
         self.prefill_chunk = prefill_chunk
         self.async_mode = async_mode
+        # speculative decoding always runs on the dispatch-ahead machinery;
+        # --async off collapses to a pipeline of depth zero (dispatch, then
+        # observe immediately) so there is exactly one speculative code
+        # path and it stays greedy token-identical to the sync engine
+        if spec_depth < 0:
+            raise ValueError(f"spec_depth must be >= 0, got {spec_depth}")
+        self.spec_depth = spec_depth
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        self._sync_pipeline = False
+        if spec_depth:
+            if draft_model is None or draft_params is None:
+                raise ValueError(
+                    "spec_depth > 0 needs a draft_model and draft_params"
+                )
+            if sub_batches != 1:
+                raise NotImplementedError(
+                    "speculative decoding does not compose with sub-batch "
+                    "pipelining yet"
+                )
+            if model.cfg.kv_quant:
+                raise NotImplementedError(
+                    "speculative decoding does not support kv_quant yet"
+                )
+            if (model.paged_verify_step if cache_kind == "paged"
+                    else model.verify_step) is None:
+                raise ValueError(
+                    f"{model.cfg.family} has no verify_step: speculative "
+                    "decoding needs the multi-position scoring entry point"
+                )
+            if draft_model.prefill_step is None:
+                raise ValueError(
+                    f"draft family {draft_model.cfg.family} has no "
+                    "prefill_step: the draft cache is filled chunk-wise"
+                )
+            if draft_model.cfg.vocab != model.cfg.vocab:
+                raise ValueError(
+                    f"draft vocab {draft_model.cfg.vocab} != target vocab "
+                    f"{model.cfg.vocab}: rejection sampling needs one "
+                    "token space"
+                )
+            if cache_kind == "paged" and (kv_dtype != "bf16" or host_blocks):
+                raise NotImplementedError(
+                    "speculative verification reads the bf16 device pool "
+                    "only (no quantized kv_dtype / host tier yet)"
+                )
+            self._sync_pipeline = not async_mode
+            self.async_mode = async_mode = True
         # disaggregated serving: the role is *advisory* routing metadata
         # (the cluster admits prompts to prefill/mixed replicas and
         # migrates finished prefills off "prefill" replicas) — the engine
@@ -349,9 +449,17 @@ class Engine:
             n_slots=n_slots, max_seq=max_seq, mode=schedule,
             prefill_chunk=prefill_chunk, token_budget=token_budget,
             block_size=block_size if cache_kind == "paged" else None,
+            spec_width=spec_depth + 1,
         )
         if schedule == "hybrid":
             self._init_hybrid(sub_batches)
+        if spec_depth:
+            # the draft cache is always dense: the draft model is small,
+            # so one (n_slots, max_seq) stripe costs little, and its
+            # lengths mirror the target's committed lengths slot-for-slot
+            self.d_cache = draft_model.init_cache(n_slots, max_seq)
+            self._draft_prefill = jax.jit(draft_model.prefill_step)
+            self._init_spec()
 
     @staticmethod
     def _wrap_sampled(base_step):
@@ -586,6 +694,122 @@ class Engine:
         self._fused = jax.jit(_fused_async)
         self._solo = jax.jit(_solo_async)
 
+    # ------------------------------------------------- speculative decoding
+    def _init_spec(self) -> None:
+        """Build the jitted speculative programs (``spec_depth > 0``).
+
+        ``spec_core`` is ONE device program per dispatch: k autoregressive
+        draft decode+sample steps, one extra draft decode (so a fully
+        accepted window leaves the draft cache holding every accepted
+        position's K/V, including the last draft's), the target's
+        (k+1)-position verify, rejection sampling, and both length
+        commits.  The emitted token at ``n_accept`` becomes the next
+        dispatch's ``tok_state`` entry without a host round-trip; the
+        full ``(B, k+1)`` emitted array and the acceptance counts travel
+        to the host lazily with the pipeline, like the non-speculative
+        token/EOS arrays.
+        """
+        model, draft = self.model, self.draft_model
+        k = self.spec_depth
+        sampler = self.sampler
+        d_decode = draft.decode_step
+        verify = (model.paged_verify_step if self.cache_kind == "paged"
+                  else model.verify_step)
+
+        def spec_core(params, d_params, cache, d_cache, tok_state, rng):
+            rngs = jax.random.split(rng, k + 1)
+            tok = tok_state
+            drafts, probs = [], []
+            for j in range(k):
+                d_logits, d_cache = d_decode(d_params, d_cache, tok)
+                tok, p = spec_draft_sample(d_logits, rngs[j], sampler)
+                drafts.append(tok)
+                if p is not None:
+                    probs.append(p)
+            # write d_k's own K/V too: on full acceptance the next window
+            # starts right after d_k, and its context must be complete
+            _, d_cache = d_decode(d_params, d_cache, tok)
+            tokens = jnp.stack([tok_state] + drafts, axis=1)      # (B, k+1)
+            v_logits, cache = verify(params, cache, tokens)
+            emitted, n_accept = spec_verify_tokens(
+                v_logits,
+                jnp.stack(drafts, axis=1),
+                jnp.stack(probs, axis=1) if probs else None,
+                rngs[k], sampler,
+            )
+            # KV rollback is just the commit: lengths advance only over
+            # the accepted prefix + bonus token; rejected positions'
+            # writes sit past the length and are causally invisible.  The
+            # k+1 draft decodes advanced d_cache by k+1 — net it back to
+            # the same n_accept+1 commit the target took.
+            cache = {**cache, "lengths": cache["lengths"] + n_accept + 1}
+            d_cache = {**d_cache,
+                       "lengths": d_cache["lengths"] + n_accept - k}
+            state = emitted[jnp.arange(emitted.shape[0]), n_accept]
+            return state, emitted, n_accept, cache, d_cache
+
+        self._spec_step = jax.jit(spec_core)
+        if self.schedule != "hybrid":
+            return
+        if self.cache_kind == "paged":
+
+            def _spec_fused(params, d_params, cache, staging, d_cache,
+                            tok_state, pre_tokens, slot, lane, off, nv,
+                            rng, last):
+                r_pre, r_spec = jax.random.split(rng)
+                pre_logits, staging = model.prefill_step(
+                    params, staging, pre_tokens, lane, off, nv
+                )
+                state, emitted, n_accept, cache, d_cache = spec_core(
+                    params, d_params, cache, d_cache, tok_state, r_spec
+                )
+                pre_tok = sample_on_device(pre_logits, r_pre, sampler)
+                state = jnp.where(last, state.at[slot].set(pre_tok[0]), state)
+                return (state, emitted, n_accept, pre_tok,
+                        cache, staging, d_cache)
+        else:
+
+            def _spec_fused(params, d_params, cache, d_cache, tok_state,
+                            pre_tokens, slot, off, nv, rng, last):
+                r_pre, r_spec = jax.random.split(rng)
+                pre_logits, cache = model.prefill_step(
+                    params, cache, pre_tokens, slot, off, nv
+                )
+                state, emitted, n_accept, cache, d_cache = spec_core(
+                    params, d_params, cache, d_cache, tok_state, r_spec
+                )
+                # the verify advanced every slot's length; the mid-prefill
+                # slot stays at its chunk end (its garbage writes beyond
+                # that are overwritten by the next chunk / first decode)
+                lengths = cache["lengths"].at[slot].set(off + nv)
+                cache = {**cache, "lengths": lengths}
+                pre_tok = sample_on_device(pre_logits, r_pre, sampler)
+                state = jnp.where(last, state.at[slot].set(pre_tok[0]), state)
+                return state, emitted, n_accept, pre_tok, cache, d_cache
+
+        self._spec_fused = jax.jit(_spec_fused)
+
+    def _draft_prefill_slot(self, slot: int, tokens: np.ndarray) -> None:
+        """Prefill ``tokens`` into the draft cache at ``slot`` so draft
+        and target lengths agree at the next dispatch boundary.  Chunked
+        at ``prefill_chunk`` (one compiled shape per bucket); runs at
+        dispatch time — device data-flow orders it after every in-flight
+        step's d_cache writes and before the slot's next speculative
+        dispatch reads it."""
+        if not self.spec_depth:
+            return
+        bucket = self.prefill_chunk
+        wslot = np.int32(slot)
+        for start in range(0, len(tokens), bucket):
+            nv = min(bucket, len(tokens) - start)
+            buf = np.zeros((1, bucket), np.int32)
+            buf[0, :nv] = tokens[start:start + nv]
+            _, self.d_cache = self._draft_prefill(
+                self.draft_params, self.d_cache, jnp.asarray(buf),
+                wslot, np.int32(start), np.int32(nv),
+            )
+            self.stats.draft_steps += 1
+
     # ------------------------------------------------------------- requests
     def submit(self, req: Request):
         if len(req.prompt) >= self.max_seq - 1:
@@ -818,6 +1042,10 @@ class Engine:
                 self._tok_state, slot, int(req.out_tokens[-1])
             )
             self._eos_dev = paged_dev.set_stop_id(self._eos_dev, slot, req.eos_id)
+            # the draft cache did not travel: rebuild it from the history
+            # (everything but the next-input token, matching the target's
+            # imported KV length exactly)
+            self._draft_prefill_slot(slot, self._refold(req)[:-1])
         self.stats.migrations_in += 1
         return slot
 
@@ -886,7 +1114,9 @@ class Engine:
     def _refold(req: Request) -> np.ndarray:
         """Prompt plus already-generated tokens: prefilling this exactly
         reproduces a preempted request's decode state (greedy-exact)."""
-        assert req.in_flight == 0, "refold needs every dispatched token observed"
+        assert req.in_flight == 0 and req.in_flight_steps == 0, (
+            "refold needs every dispatched token observed"
+        )
         return np.concatenate(
             [np.asarray(req.prompt, np.int32),
              np.asarray(req.out_tokens, np.int32)]
@@ -898,8 +1128,17 @@ class Engine:
         dispatched token is observed?  Mirrors ``_finish_decode``'s check
         exactly: the first token after a (re-)admission comes from a
         prefill sample and is never length-checked, so a request is only
-        predicted done once a *decode* token can trip the condition."""
-        c = len(req.out_tokens) + req.in_flight
+        predicted done once a *decode* token can trip the condition.
+
+        Speculation: ``in_flight_steps`` is the guaranteed-commit floor
+        (each dispatched window commits at least its bonus token), so a
+        predicted-done here is certain — the engine never pauses a live
+        slot whose device rows later dispatches would keep mutating.
+        Extra tokens a window commits beyond the floor only finish the
+        request *earlier*; the surplus dispatches are masked at observe
+        exactly like the one-step EOS lag.
+        """
+        c = len(req.out_tokens) + req.in_flight_steps
         if c < req.admit_base + 2:
             return False
         return (c >= req.max_new_tokens
@@ -913,14 +1152,20 @@ class Engine:
 
     def _dispatch(self, rec: _PendingStep) -> None:
         """Queue a dispatched step; observe the previous one *after* the
-        new one is in flight (the dispatch-ahead overlap)."""
+        new one is in flight (the dispatch-ahead overlap).  A sync-mode
+        speculative engine runs the same pipeline at depth zero: observe
+        immediately after dispatch."""
         self._pending.append(rec)
+        if self._sync_pipeline:
+            self._drain()
+            return
         if len(self._pending) > 1:
             self._observe(self._pending.popleft())
 
     def _flush_first(self) -> None:
         for req, tok in self._first_pending:
             req.in_flight -= 1
+            req.in_flight_steps -= 1
             req.out_tokens.append(int(np.asarray(tok)[0]))
         self._first_pending.clear()
 
@@ -936,17 +1181,23 @@ class Engine:
         if rec.work is not None and rec.work.last:
             req = rec.work.req
             req.in_flight -= 1
+            req.in_flight_steps -= 1
             req.out_tokens.append(int(np.asarray(rec.pre_tok)[0]))
         if rec.work2 is not None and rec.work2.last:
             req = rec.work2.req
             req.in_flight -= 1
+            req.in_flight_steps -= 1
             req.out_tokens.append(int(np.asarray(rec.pre_tok2)[0]))
         if rec.tokens is None:
             return
         toks = np.asarray(rec.tokens)
+        if rec.n_accept is not None:
+            self._observe_spec(rec, toks)
+            return
         eos = np.asarray(rec.eos)
         for i, req in rec.reqs.items():
             req.in_flight -= 1
+            req.in_flight_steps -= 1
             if req.done:
                 continue            # speculative token past EOS: masked
             tok = int(toks[i])
@@ -959,6 +1210,49 @@ class Engine:
                 or length >= self.max_seq - 1
             ):
                 self._finish(i, req, rec.step)
+
+    def _observe_spec(self, rec: _PendingStep, toks: np.ndarray) -> None:
+        """Apply one observed speculative window: per batch row, commit
+        the accepted drafts plus the bonus/correction token (``toks[i]``
+        holds ``n_accept[i] + 1`` valid leading positions), refund the
+        unused in-flight charges, and stop at the first finish condition
+        — an EOS *inside* the accepted window truncates the rest."""
+        n_acc = np.asarray(rec.n_accept)
+        accepted = 0
+        for i, req in rec.reqs.items():
+            req.in_flight -= rec.charge
+            req.in_flight_steps -= 1
+            if req.done:
+                continue            # window dispatched past EOS: masked
+            n_emit = int(n_acc[i]) + 1
+            accepted += n_emit - 1
+            self.stats.drafted_tokens += self.spec_depth
+            self.stats.accepted_tokens += n_emit - 1
+            self.stats.spec_accept_samples.append(
+                (n_emit - 1) / self.spec_depth
+            )
+            self._apply_spec_row(i, req, toks[i], n_emit, rec.step)
+        if self.tracer.enabled:
+            self.tracer.on_spec_verify(self.replica, rec.step, accepted,
+                                       len(rec.reqs))
+
+    def _apply_spec_row(self, slot: int, req: Request, row: np.ndarray,
+                        n_emit: int, step: int) -> None:
+        """Commit one slot's emitted tokens in stream order, applying the
+        sync engine's finish conditions after each — identical to
+        observing ``n_emit`` consecutive non-speculative steps."""
+        for t in range(n_emit):
+            tok = int(row[t])
+            req.out_tokens.append(tok)
+            self.stats.generated += 1
+            length = len(req.prompt) + len(req.out_tokens)
+            if (
+                tok == req.eos_id
+                or len(req.out_tokens) >= req.max_new_tokens
+                or length >= self.max_seq - 1
+            ):
+                self._finish(slot, req, step)
+                break
 
     def _drain(self) -> None:
         """Observe every in-flight step (pipeline empties; ``out_tokens``
@@ -984,6 +1278,7 @@ class Engine:
         for r, tok in self._first_pending:
             if r is req:
                 r.in_flight -= 1
+                r.in_flight_steps -= 1
                 r.out_tokens.append(int(np.asarray(tok)[0]))
             else:
                 kept.append((r, tok))
@@ -991,16 +1286,31 @@ class Engine:
         for rec in self._pending:
             if rec.work is not None and rec.work.last and rec.work.req is req:
                 req.in_flight -= 1
+                req.in_flight_steps -= 1
                 req.out_tokens.append(int(np.asarray(rec.pre_tok)[0]))
                 rec.work = None          # consumed; _observe must not re-apply
             if rec.work2 is not None and rec.work2.last and rec.work2.req is req:
                 req.in_flight -= 1
+                req.in_flight_steps -= 1
                 req.out_tokens.append(int(np.asarray(rec.pre_tok2)[0]))
                 rec.work2 = None
             if rec.tokens is not None and rec.reqs.get(slot) is req:
                 del rec.reqs[slot]
-                req.in_flight -= 1
+                req.in_flight -= rec.charge
+                req.in_flight_steps -= 1
                 if req.done:
+                    continue
+                if rec.n_accept is not None:
+                    n_emit = int(np.asarray(rec.n_accept)[slot]) + 1
+                    self.stats.drafted_tokens += self.spec_depth
+                    self.stats.accepted_tokens += n_emit - 1
+                    self.stats.spec_accept_samples.append(
+                        (n_emit - 1) / self.spec_depth
+                    )
+                    self._apply_spec_row(
+                        slot, req, np.asarray(rec.tokens[slot]), n_emit,
+                        rec.step,
+                    )
                     continue
                 req.out_tokens.append(int(np.asarray(rec.tokens[slot])))
                 self.stats.generated += 1
@@ -1011,7 +1321,9 @@ class Engine:
                     or length >= self.max_seq - 1
                 ):
                     self._finish(slot, req, rec.step)
-        assert req.in_flight == 0, "victim drain left tokens in flight"
+        assert req.in_flight == 0 and req.in_flight_steps == 0, (
+            "victim drain left tokens in flight"
+        )
 
     def _finish(self, slot: int, req: Request, step: int) -> None:
         """Retire a completed request: stats samples, trace, slot release.
@@ -1073,6 +1385,7 @@ class Engine:
             logits, sub_cache = self._prefill(self.params, prompt, sub_cache)
             self.cache = kv_cache.insert(self.cache, sub_cache, slot)
             self.slots[slot] = req
+            self._draft_prefill_slot(slot, np.asarray(req.prompt, np.int32))
             self._sample_prefill(req, slot, logits)
 
     def _admit_paged(self):
@@ -1124,6 +1437,7 @@ class Engine:
                 self.cache, slot, self.manager.tables[slot], len(full)
             )
             self.slots[slot] = req
+            self._draft_prefill_slot(slot, full)
             self._sample_prefill(req, slot, logits)
 
     def _sample_prefill(self, req: Request, slot: int, logits):
@@ -1136,6 +1450,7 @@ class Engine:
             self._tok_state = paged_dev.feed_token(self._tok_state, slot, tok[0])
             self._eos_dev = paged_dev.set_stop_id(self._eos_dev, slot, req.eos_id)
             req.in_flight += 1
+            req.in_flight_steps += 1
             self._first_pending.append((req, tok))
         else:
             req.out_tokens.append(int(sample(logits, self._next_rng(), self.sampler)[0]))
@@ -1230,9 +1545,11 @@ class Engine:
                     self.cache, work.slot, self.manager.tables[work.slot],
                     work.start + work.n_valid,
                 )
+            self._draft_prefill_slot(work.slot, self._pf_tokens[work.slot])
             self._end_prefill(work.slot)
             req.admit_base = len(req.out_tokens)
             req.in_flight += 1
+            req.in_flight_steps += 1
             self._eos_dev = paged_dev.set_stop_id(
                 self._eos_dev, work.slot, req.eos_id
             )
@@ -1302,9 +1619,25 @@ class Engine:
         """KV positions held for ``slot`` (last sampled token not yet
         appended — it is this step's input).  Counts in-flight tokens:
         the async engine plans appends from dispatched, not observed,
-        state."""
+        state.  Under speculation the charges are an upper bound on the
+        commits, so this over- rather than under-states the device
+        length — safe for spill/export sizing."""
         req = self.slots[slot]
         return len(req.prompt) + len(req.out_tokens) + req.in_flight - 1
+
+    def _append_span(self, slot: int) -> tuple[int, int]:
+        """Inclusive position range [lo, hi] the slot's next dispatch may
+        write.  With in-flight speculative windows the device length is
+        only known to lie in [committed + steps, committed + charges];
+        the next window then writes up to ``spec_depth`` positions past
+        its start, so every position through hi needs a mapped block.
+        Without speculation lo == hi == :meth:`_kv_len` — the single
+        append position of the original code."""
+        req = self.slots[slot]
+        base = len(req.prompt) + len(req.out_tokens)
+        lo = base + req.in_flight_steps - 1
+        hi = base + req.in_flight - 1 + self.spec_depth
+        return lo, hi
 
     def _preempt(self, slot: int):
         """Evict ``slot`` to the queue front; blocks return to the pool.
@@ -1322,9 +1655,12 @@ class Engine:
         self.tracer.on_preempt(self.replica, req, self.stats.engine_steps, slot)
 
     def _prepare_append(self, active: list[int]) -> list[int]:
-        """Guarantee every active slot can write its next token: allocate
-        boundary blocks, copy-on-write shared tails, preempt the youngest
-        sequence when the pool runs dry.  Returns the surviving slots.
+        """Guarantee every active slot can write its next dispatch's
+        token span (one position, or up to ``spec_depth + 1`` per
+        in-flight window under speculation — see :meth:`_append_span`):
+        allocate boundary blocks, copy-on-write shared tails, preempt the
+        youngest sequence when the pool runs dry.  Returns the surviving
+        slots.
 
         Async: a preemption decision snapshots ``out_tokens`` for exact
         recovery, but only the *victim's* history has to be exact — so
@@ -1338,14 +1674,23 @@ class Engine:
         preemption entirely, and one settled iteration is far cheaper
         than re-prefilling the victim's whole KV."""
         alive = set(active)
+        limit = self.max_blocks * self.block_size
         for slot in sorted(active, key=lambda s: self.manager.admit_seq[s]):
+            pos = None
             while slot in alive:
                 if self.slots[slot] is None:
                     alive.discard(slot)     # retired during a drain below
                     break
-                directive, payload = self.manager.ensure_append(
-                    slot, self._kv_len(slot)
-                )
+                # a drain below can move the span: observed commits raise
+                # lo (each step commits at least one token) and shrink hi
+                # (unused charges refund), so pos only ever moves forward
+                lo, hi = self._append_span(slot)
+                if pos is None or pos < lo:
+                    pos = lo
+                if pos > hi or pos >= limit:
+                    break       # span mapped (or clamped at the cache top:
+                                # writes past it are dropped/masked on device)
+                directive, payload = self.manager.ensure_append(slot, pos)
                 if directive == "oom":
                     if self.pool.host_blocks and self._try_spill(alive):
                         continue    # freed a block without evicting anyone
@@ -1368,7 +1713,7 @@ class Engine:
                     self.cache = paged_dev.sync_slot(
                         self.cache, slot, self.manager.tables[slot]
                     )
-                break
+                pos += 1
         return [s for s in active if s in alive]
 
     # ------------------------------------------- boundary packing (Sarathi-SC)
@@ -1513,13 +1858,13 @@ class Engine:
             wall=self.tracer.wall(),
         ))
 
-    @staticmethod
-    def _dispatch_kind(active, work, work2) -> str:
+    def _dispatch_kind(self, active, work, work2) -> str:
+        spec = bool(self.spec_depth and active)
         if work2 is not None:
             return "fused2" if active else "solo2"
         if work is not None:
-            return "fused" if active else "solo"
-        return "decode"
+            return ("spec_fused" if spec else "fused") if active else "solo"
+        return "spec" if spec else "decode"
 
     # ----------------------------------------------------------------- step
     def _decode_tokens(self) -> jax.Array:
@@ -1584,22 +1929,42 @@ class Engine:
             return any(s is not None for s in self.slots) or self.sched.has_work()
         self.stats.peak_active = max(self.stats.peak_active, len(active))
 
-        toks, eos, self.cache = self._decode_sampled(
-            self.params, self.cache, self._tok_state, self._step_rng(),
-            self._eos_dev, sampler=self.sampler,
-        )
-        self._tok_state = toks
+        eos = n_accept = None
+        if self.spec_depth:
+            (self._tok_state, toks, n_accept,
+             self.cache, self.d_cache) = self._spec_step(
+                self.params, self.draft_params, self.cache, self.d_cache,
+                self._tok_state, self._step_rng(),
+            )
+        else:
+            toks, eos, self.cache = self._decode_sampled(
+                self.params, self.cache, self._tok_state, self._step_rng(),
+                self._eos_dev, sampler=self.sampler,
+            )
+            self._tok_state = toks
         self.stats.decode_steps += 1
         self.stats.engine_steps += 1
+        charge = 1
+        if self.spec_depth:
+            charge = self.spec_depth + 1
+            self.stats.spec_steps += 1
+            self.stats.draft_steps += self.spec_depth + 1
         if self.tracer.enabled:
-            self._trace_step("decode", active)
+            self._trace_step("spec" if self.spec_depth else "decode", active)
+            if self.spec_depth:
+                self.tracer.on_spec_propose(
+                    self.replica, self.stats.engine_steps,
+                    self.spec_depth, len(active),
+                )
         reqs = {}
         for i in active:
             req = self.slots[i]
-            req.in_flight += 1
+            req.in_flight += charge
+            req.in_flight_steps += 1
             reqs[i] = req
         self._dispatch(_PendingStep(
             step=self.stats.engine_steps, reqs=reqs, tokens=toks, eos=eos,
+            n_accept=n_accept, charge=charge,
         ))
         return True
 
@@ -1761,14 +2126,16 @@ class Engine:
         rng = self._step_rng()
 
         # boundary packing, async twin (see _step_hybrid): the next
-        # prompt's head chunk joins the same sampled dispatch
+        # prompt's head chunk joins the same sampled dispatch.  Disabled
+        # under speculation — the fused2 programs have no spec variant,
+        # and the budget a spec verify leaves over rarely fits two chunks
         work2 = None
         pre_advanced = False
         if work is not None:
             chunk, off, nv = self._chunk_arrays(work)
             wslot = np.int32(work.slot)
             lane = np.int32(self._pf_lane.get(work.slot, 0))
-            if work.last and len(sched):
+            if work.last and len(sched) and not self.spec_depth:
                 sched.advance(work)
                 pre_advanced = True
                 work2 = self._boundary_chunk(
@@ -1779,7 +2146,7 @@ class Engine:
                     wslot2 = np.int32(work2.slot)
                     lane2 = np.int32(self._pf_lane.get(work2.slot, 0))
 
-        toks = eos = pre_tok = pre_tok2 = None
+        toks = eos = pre_tok = pre_tok2 = n_accept = None
         if work2 is not None:
             self.stats.boundary_packs += 1
             self.tracer.on_boundary_pack(self.replica, work2.req,
@@ -1817,7 +2184,22 @@ class Engine:
                     rng, work2.last,
                 )
         elif active and work is not None:
-            if self.cache_kind == "paged":
+            if self.spec_depth:
+                if self.cache_kind == "paged":
+                    (self._tok_state, toks, n_accept, pre_tok, self.cache,
+                     self.staging, self.d_cache) = self._spec_fused(
+                        self.params, self.draft_params, self.cache,
+                        self.staging, self.d_cache, self._tok_state,
+                        chunk, wslot, lane, off, nv, rng, work.last,
+                    )
+                else:
+                    (self._tok_state, toks, n_accept, pre_tok,
+                     self.cache, self.d_cache) = self._spec_fused(
+                        self.params, self.draft_params, self.cache,
+                        self.d_cache, self._tok_state,
+                        chunk, wslot, off, nv, rng, work.last,
+                    )
+            elif self.cache_kind == "paged":
                 (self._tok_state, toks, eos, pre_tok,
                  self.cache, self.staging) = self._fused(
                     self.params, self.cache, self.staging, self._tok_state,
@@ -1830,14 +2212,32 @@ class Engine:
                 )
             self.stats.decode_steps += 1
         elif active:
-            toks, eos, self.cache = self._decode_sampled(
-                self.params, self.cache, self._tok_state, rng,
-                self._eos_dev, sampler=self.sampler,
-            )
-            self._tok_state = toks
+            if self.spec_depth:
+                (self._tok_state, toks, n_accept,
+                 self.cache, self.d_cache) = self._spec_step(
+                    self.params, self.draft_params, self.cache, self.d_cache,
+                    self._tok_state, rng,
+                )
+            else:
+                toks, eos, self.cache = self._decode_sampled(
+                    self.params, self.cache, self._tok_state, rng,
+                    self._eos_dev, sampler=self.sampler,
+                )
+                self._tok_state = toks
             self.stats.decode_steps += 1
         else:
             pre_tok = self._exec_solo_async(work, rng)
+
+        charge = 1
+        if self.spec_depth and active:
+            charge = self.spec_depth + 1
+            self.stats.spec_steps += 1
+            self.stats.draft_steps += self.spec_depth + 1
+            if self.tracer.enabled:
+                self.tracer.on_spec_propose(
+                    self.replica, self.stats.engine_steps,
+                    self.spec_depth, len(active),
+                )
 
         if self.tracer.enabled:
             self._trace_step(self._dispatch_kind(active, work, work2),
@@ -1845,11 +2245,13 @@ class Engine:
         reqs = {}
         for i in active:
             req = self.slots[i]
-            req.in_flight += 1
+            req.in_flight += charge
+            req.in_flight_steps += 1
             reqs[i] = req
         rec = _PendingStep(
             step=self.stats.engine_steps, reqs=reqs, tokens=toks, eos=eos,
             work=work, pre_tok=pre_tok, work2=work2, pre_tok2=pre_tok2,
+            n_accept=n_accept, charge=charge,
         )
         if work is not None:
             self.stats.prefill_chunks += 1

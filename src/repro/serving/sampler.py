@@ -41,6 +41,102 @@ def sample_on_device(logits: jax.Array, rng: jax.Array, cfg: SamplerConfig) -> j
     return jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
 
 
+def _transformed(logits: jax.Array, cfg: SamplerConfig) -> jax.Array:
+    """The sampling distribution's logits under ``cfg`` (temperature > 0):
+    the exact transform :func:`sample_on_device` samples from, factored
+    out so speculative rejection sampling scores draft and target under
+    the *same* modified distribution."""
+    scaled = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(scaled, cfg.top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return scaled
+
+
+def spec_draft_sample(
+    logits: jax.Array, rng: jax.Array, cfg: SamplerConfig
+) -> tuple[jax.Array, jax.Array | None]:
+    """Draft proposal for one speculative position.
+
+    logits (B, V) -> (token (B,) int32, probs (B, V) f32 | None).  The
+    probs are the draft's full sampling distribution (None for greedy,
+    where acceptance is an argmax match and needs no probabilities);
+    rejection sampling divides by them, so they must be the distribution
+    the token was *actually* drawn from.
+    """
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), None
+    scaled = _transformed(logits, cfg)
+    tok = jax.random.categorical(rng, scaled, axis=-1).astype(jnp.int32)
+    return tok, jax.nn.softmax(scaled, axis=-1)
+
+
+def spec_verify_tokens(
+    logits: jax.Array,
+    drafts: jax.Array | None,
+    draft_probs: jax.Array | None,
+    rng: jax.Array,
+    cfg: SamplerConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """Accept/reject k draft tokens against the target's verify logits.
+
+    ``logits`` (B, T, V) with T = k+1: position ``t`` is the target's
+    distribution over the successor of verify input ``t``; ``drafts``
+    (B, k) are the proposals d_1..d_k (None when k == 0); ``draft_probs``
+    (B, k, V) their sampling distributions (None for greedy).  Returns
+    ``(emitted (B, T) int32, n_accept (B,) int32)`` where positions
+    ``0 .. n_accept`` of ``emitted`` are the step's valid output tokens
+    (accepted drafts plus one bonus/correction token) and later positions
+    are garbage the caller must ignore.
+
+    Greedy accepts while the draft matches the target argmax, so the
+    emitted stream is *token-identical* to non-speculative greedy
+    decoding.  With temperature, standard rejection sampling
+    (accept d with prob min(1, p_t(d)/p_d(d)), resample rejections from
+    the clipped residual ``max(p_t - p_d, 0)``) makes each emitted token
+    an exact sample from the target's (temperature/top-k modified)
+    distribution regardless of draft quality.
+    """
+    B, T, V = logits.shape
+    k = T - 1
+    if cfg.temperature <= 0.0:
+        tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (B, T)
+        if k == 0:
+            return tgt, jnp.zeros((B,), jnp.int32)
+        match = (drafts == tgt[:, :k]).astype(jnp.int32)
+        n_accept = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+        return tgt, n_accept
+    p_t = jax.nn.softmax(_transformed(logits, cfg), axis=-1)      # (B, T, V)
+    r_acc, r_res = jax.random.split(rng)
+    bidx = jnp.arange(B)
+    if k > 0:
+        p_t_d = jnp.take_along_axis(p_t[:, :k], drafts[..., None], -1)[..., 0]
+        p_d_d = jnp.take_along_axis(draft_probs, drafts[..., None], -1)[..., 0]
+        u = jax.random.uniform(r_acc, (B, k))
+        # u < p_t/p_d, written multiplicatively so p_d -> 0 stays finite
+        accept = (u * p_d_d < p_t_d).astype(jnp.int32)
+        n_accept = jnp.sum(jnp.cumprod(accept, axis=1), axis=1)   # (B,)
+        # pad a zero draft distribution at position k: a fully accepted
+        # window's bonus token is a direct target sample (residual = p_t)
+        q_pad = jnp.concatenate(
+            [draft_probs, jnp.zeros((B, 1, V), p_t.dtype)], axis=1
+        )
+        emitted = jnp.concatenate([drafts, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    else:
+        n_accept = jnp.zeros((B,), jnp.int32)
+        q_pad = jnp.zeros_like(p_t)
+        emitted = jnp.zeros((B, 1), jnp.int32)
+    p_a = p_t[bidx, n_accept]                                     # (B, V)
+    q_a = q_pad[bidx, n_accept]
+    resid = jnp.clip(p_a - q_a, 0.0, None)
+    denom = jnp.sum(resid, axis=-1, keepdims=True)
+    # an exhausted residual (p_t == p_d pointwise) falls back to p_t
+    resid = jnp.where(denom > 0, resid / jnp.maximum(denom, 1e-30), p_a)
+    bonus = jax.random.categorical(r_res, jnp.log(resid + 1e-30), axis=-1)
+    emitted = emitted.at[bidx, n_accept].set(bonus.astype(jnp.int32))
+    return emitted, n_accept
+
+
 def sample(logits: jax.Array, rng: jax.Array, cfg: SamplerConfig) -> jax.Array:
     """Host oracle: logits (B, V) -> tokens (B,) int32.
 

@@ -94,21 +94,30 @@ class Scheduler:
         prefill_chunk: int = 32,
         token_budget: int | None = None,
         block_size: int | None = None,
+        spec_width: int = 1,
     ):
         if mode not in ("decode-only", "hybrid"):
             raise ValueError(f"unknown schedule mode {mode!r}")
+        if spec_width < 1:
+            raise ValueError(f"spec_width must be >= 1, got {spec_width}")
         self.mode = mode
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
         self.block_size = block_size
+        # speculative decoding makes every decode slot a (k+1)-position
+        # verify, so each active slot charges spec_width = k+1 budget
+        # tokens — a prefill chunk only gets what the verifies leave over
+        self.spec_width = spec_width
         self.token_budget = (
-            n_slots + prefill_chunk if token_budget is None else token_budget
+            n_slots * spec_width + prefill_chunk
+            if token_budget is None else token_budget
         )
-        if self.token_budget < n_slots:
+        if self.token_budget < n_slots * spec_width:
             raise ValueError(
-                f"token_budget={self.token_budget} cannot cover one decode "
-                f"token per slot (n_slots={n_slots})"
+                f"token_budget={self.token_budget} cannot cover "
+                f"{spec_width} verify position(s) per slot "
+                f"(n_slots={n_slots}, spec_width={spec_width})"
             )
         if mode == "hybrid" and block_size is not None:
             if prefill_chunk < block_size or prefill_chunk % block_size:
@@ -176,7 +185,9 @@ class Scheduler:
     def _pack(self, active_slots: list[int]) -> Decision:
         work = None
         if self.mode == "hybrid":
-            work = self._make_chunk(self.token_budget - len(active_slots))
+            work = self._make_chunk(
+                self.token_budget - len(active_slots) * self.spec_width
+            )
         return Decision(decode_slots=list(active_slots), prefill=work)
 
     def _make_chunk(self, budget: int) -> PrefillChunk | None:

@@ -107,6 +107,14 @@ def to_chrome_trace(tracer: Tracer) -> dict:
         if e.replica < 0:
             has_router = True
         events.append(_instant_event(e))
+        if e.name == "spec_verify":
+            # acceptance as a counter track: Perfetto graphs accepted
+            # draft tokens per speculative window next to the step rows
+            events.append({
+                "name": "accepted_per_step", "ph": "C", "pid": e.replica,
+                "tid": 0, "ts": e.step * TICK_US,
+                "args": {"accepted_per_step": e.attrs.get("accepted", 0)},
+            })
     if has_router:
         events.append(_meta(CLUSTER_PID, None, "cluster"))
         events.append(_meta(CLUSTER_PID, TRACK_ROUTER, "router"))

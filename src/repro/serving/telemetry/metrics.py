@@ -127,6 +127,7 @@ _ENGINE_COUNTERS = (
     "prefills", "prefill_chunks", "boundary_packs", "decode_steps",
     "engine_steps", "generated", "preemptions", "victim_drains",
     "spills", "rehydrations", "migrations_out", "migrations_in",
+    "spec_steps", "draft_steps", "drafted_tokens", "accepted_tokens",
 )
 
 
@@ -141,6 +142,12 @@ def engine_registry(stats, pool_stats=None) -> MetricsRegistry:
     reg.gauge("mean_ttft_steps").set(stats.mean_ttft_steps)
     reg.histogram("ttft_steps").extend(stats.ttft_samples)
     reg.histogram("per_token_steps").extend(stats.per_token_samples)
+    # speculative decoding: overall acceptance ratio plus the per-window
+    # acceptance-fraction distribution (one sample per observed verify row)
+    reg.gauge("spec_accept_rate").set(stats.acceptance_rate)
+    reg.histogram("spec_accept_frac").extend(
+        getattr(stats, "spec_accept_samples", ())
+    )
     if pool_stats is not None:
         for name in ("allocs", "frees", "hash_hits", "cow_copies",
                      "spills", "rehydrates", "host_evictions"):

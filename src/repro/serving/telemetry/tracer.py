@@ -137,6 +137,12 @@ class NullTracer:
     def on_rehydrate(self, replica, step, host_block, dev_block):
         pass
 
+    def on_spec_propose(self, replica, step, depth, batch):
+        pass
+
+    def on_spec_verify(self, replica, step, accepted, batch):
+        pass
+
     def on_step(self, record):
         pass
 
@@ -287,6 +293,24 @@ class Tracer:
         """One KV block copied host tier -> device (prefix re-hydration)."""
         self._event(replica, TRACK_STEPS, -1, "kv_rehydrate", step,
                     host=host_block, dev=dev_block)
+
+    # ------------------------------------------------- speculative decoding
+    def on_spec_propose(self, replica: int, step: int, depth: int,
+                        batch: int) -> None:
+        """One speculative dispatch: ``depth`` draft tokens proposed per
+        slot for ``batch`` decode slots.  Not tied to a request: stamped
+        on the steps track at dispatch."""
+        self._event(replica, TRACK_STEPS, -1, "spec_propose", step,
+                    depth=depth, batch=batch)
+
+    def on_spec_verify(self, replica: int, step: int, accepted: int,
+                       batch: int) -> None:
+        """One speculative window observed: ``accepted`` draft tokens
+        (bonus tokens excluded) accepted across ``batch`` slots.  Stamped
+        at the window's *dispatch* step (the pending record's clock), so
+        propose/verify marks pair up on the timeline."""
+        self._event(replica, TRACK_STEPS, -1, "spec_verify", step,
+                    accepted=accepted, batch=batch)
 
     # ------------------------------------------------------------- timeline
     def on_step(self, record) -> None:

@@ -1,0 +1,305 @@
+"""Speculative multi-token decoding: greedy outputs are token-identical
+to non-speculative serving at every depth across all cache x schedule
+combos (sync and async, incl. preemption/refold and EOS landing inside
+an accepted window), temperature rejection sampling preserves the exact
+target distribution, the engine's load accounting charges k+1 tokens
+per in-flight verify window, and the spec telemetry (trace marks,
+acceptance metrics) round-trips."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.reduced import reduce_config
+from repro.core.placement import Env
+from repro.models.registry import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.sampler import (
+    SamplerConfig,
+    _transformed,
+    spec_draft_sample,
+    spec_verify_tokens,
+)
+from repro.serving.telemetry import (
+    Tracer,
+    engine_registry,
+    to_chrome_trace,
+)
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = reduce_config("llama3.2-1b")
+    model = build_model(cfg, Env())
+    return model, model.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def draft():
+    """A same-family, differently-seeded draft: its proposals mostly
+    *miss*, so identity tests exercise the rejection path for real."""
+    cfg = reduce_config("llama3.2-1b")
+    model = build_model(cfg, Env())
+    return model, model.init(jax.random.key(1))
+
+
+PROMPTS = [np.arange(1, 6, dtype=np.int32),
+           np.arange(7, 10, dtype=np.int32),
+           np.arange(2, 13, dtype=np.int32),
+           np.arange(4, 25, dtype=np.int32)]      # multi-chunk
+
+
+def _serve(model, params, prompts, n_new=5, eos_id=-1, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_seq", 32)
+    eng = Engine(model, params, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=n_new, eos_id=eos_id)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return reqs, eng
+
+
+COMBOS = [
+    dict(),
+    dict(schedule="hybrid", prefill_chunk=8),
+    dict(cache_kind="paged", block_size=8),
+    dict(cache_kind="paged", block_size=8, schedule="hybrid", prefill_chunk=8),
+]
+IDS = ["dense/decode-only", "dense/hybrid", "paged/decode-only", "paged/hybrid"]
+
+
+# -------------------------------------------------------- greedy identity
+@pytest.mark.parametrize("combo", COMBOS, ids=IDS)
+@pytest.mark.parametrize("async_mode", [False, True], ids=["sync", "async"])
+def test_spec_greedy_token_identical(model_params, draft, combo, async_mode):
+    """Whatever the draft proposes, greedy speculative serving emits the
+    exact token stream of non-speculative serving — the verify argmax is
+    the decode argmax, and rejection truncates at the first mismatch."""
+    model, params = model_params
+    dmodel, dparams = draft
+    base, _ = _serve(model, params, PROMPTS, async_mode=True, **combo)
+    for depth in (2, 4):
+        spec, eng = _serve(model, params, PROMPTS, async_mode=async_mode,
+                           spec_depth=depth, draft_model=dmodel,
+                           draft_params=dparams, **combo)
+        assert eng.stats.spec_steps >= 1
+        for b, s in zip(base, spec):
+            assert s.done and s.in_flight == 0 and s.in_flight_steps == 0
+            assert b.out_tokens == s.out_tokens, \
+                (depth, b.uid, b.out_tokens, s.out_tokens)
+
+
+def test_spec_preemption_refold_identical(model_params, draft):
+    """Block pressure preempts a speculating slot mid-stream: the victim
+    drain must observe the pending verify window (committing its accepted
+    prefix) so the refolded prompt is exact in both engine modes."""
+    model, params = model_params
+    dmodel, dparams = draft
+    prompts = [np.arange(1, 10, dtype=np.int32),
+               np.arange(3, 8, dtype=np.int32)]
+    kw = dict(cache_kind="paged", block_size=4, n_blocks=9,
+              schedule="hybrid", prefill_chunk=8)
+    base, _ = _serve(model, params, prompts, n_new=10, async_mode=True, **kw)
+    for async_mode in (False, True):
+        spec, eng = _serve(model, params, prompts, n_new=10,
+                           async_mode=async_mode, spec_depth=2,
+                           draft_model=dmodel, draft_params=dparams, **kw)
+        assert eng.stats.preemptions >= 1
+        assert eng.pool.in_use == 0
+        for b, s in zip(base, spec):
+            assert b.out_tokens == s.out_tokens, (b.uid, async_mode)
+
+
+def test_spec_eos_inside_accepted_window(model_params, draft):
+    """With a perfect draft (target params) whole windows are accepted at
+    once; an EOS in the middle of the window must truncate the emitted
+    run exactly where non-speculative decoding stops."""
+    model, params = model_params
+    dmodel, _ = draft
+    prompts = [np.arange(1, 10, dtype=np.int32),
+               np.arange(3, 8, dtype=np.int32)]
+    ref, _ = _serve(model, params, prompts, n_new=8, async_mode=True)
+    eos = ref[0].out_tokens[3]          # lands mid-window at depth 4
+    base, _ = _serve(model, params, prompts, n_new=8, eos_id=eos,
+                     async_mode=True)
+    spec, eng = _serve(model, params, prompts, n_new=8, eos_id=eos,
+                       async_mode=True, spec_depth=4,
+                       draft_model=dmodel, draft_params=params)
+    assert eng.stats.acceptance_rate > 0.5      # windows really accepted
+    for b, s in zip(base, spec):
+        assert b.out_tokens == s.out_tokens, (b.uid, b.out_tokens, s.out_tokens)
+
+
+# ------------------------------------------------------- load accounting
+def test_spec_inflight_charges_k_plus_one(model_params, draft):
+    """Each dispatched, unobserved verify window holds k+1 in-flight
+    token charges (the commit upper bound admission control must assume)
+    while counting as a single pipeline step."""
+    model, params = model_params
+    dmodel, dparams = draft
+    depth = 3
+    eng = Engine(model, params, n_slots=1, max_seq=64, spec_depth=depth,
+                 draft_model=dmodel, draft_params=dparams)
+    req = Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                  max_new_tokens=20)
+    eng.submit(req)
+    seen_window = False
+    for _ in range(200):
+        more = eng.step()
+        if not req.done and req.in_flight_steps > 0:
+            # the pipeline holds prefill-sample steps (1 charge) and
+            # verify windows (k+1 charges); a window's full charge shows
+            # whenever in_flight exceeds the step count
+            assert req.in_flight_steps <= req.in_flight \
+                <= (depth + 1) * req.in_flight_steps
+            if req.in_flight == (depth + 1) * req.in_flight_steps:
+                seen_window = True
+            # load() reports the charged (worst-case) token footprint
+            base = len(req.prompt) + len(req.out_tokens)
+            assert eng.load().inflight_tokens == base + req.in_flight
+        if not more:
+            break
+    assert seen_window, "no step ever held only pending verify windows"
+    assert req.done and req.in_flight == 0 and req.in_flight_steps == 0
+
+
+def test_spec_perfect_draft_full_acceptance(model_params, draft):
+    """Target-as-draft accepts every window: acceptance rate 1.0 and
+    roughly (k+1)x fewer engine steps than token count."""
+    model, params = model_params
+    dmodel, _ = draft
+    reqs, eng = _serve(model, params, PROMPTS, n_new=8, async_mode=True,
+                       spec_depth=2, draft_model=dmodel, draft_params=params)
+    assert eng.stats.acceptance_rate == 1.0
+    assert eng.stats.drafted_tokens == eng.stats.accepted_tokens > 0
+
+
+# ------------------------------------------------ rejection-sampling math
+def _emit_first_token(t_logits, d_logits, cfg, rng):
+    """One full draft->verify round; returns the first emitted token."""
+    k = d_logits.shape[1]
+    keys = jax.random.split(rng, k + 1)
+    drafts, probs = [], []
+    for j in range(k):
+        tok, q = spec_draft_sample(d_logits[:, j], keys[j], cfg)
+        drafts.append(tok)
+        probs.append(q)
+    emitted, _ = spec_verify_tokens(
+        t_logits, jnp.stack(drafts, 1), jnp.stack(probs, 1), keys[k], cfg
+    )
+    return emitted[0, 0]
+
+
+@pytest.mark.parametrize("cfg", [
+    SamplerConfig(temperature=1.0),
+    SamplerConfig(temperature=0.7, top_k=5),
+], ids=["temperature", "top-k"])
+def test_spec_rejection_sampling_preserves_target_distribution(cfg):
+    """The emitted token's marginal equals the target's (modified)
+    softmax exactly, however bad the draft: empirical counts over many
+    independent rounds stay within 5 sigma of the analytic target."""
+    V, k, N = 8, 2, 20_000
+    t_logits = jax.random.normal(jax.random.key(10), (1, k + 1, V))
+    d_logits = 2.0 * jax.random.normal(jax.random.key(11), (1, k, V))
+    p_t = np.asarray(jax.nn.softmax(_transformed(t_logits[:, 0], cfg), -1))[0]
+    toks = jax.vmap(lambda r: _emit_first_token(t_logits, d_logits, cfg, r))(
+        jax.random.split(jax.random.key(12), N)
+    )
+    counts = np.bincount(np.asarray(toks), minlength=V).astype(float)
+    for v in range(V):
+        sigma = max(math.sqrt(N * p_t[v] * (1 - p_t[v])), 1.0)
+        assert abs(counts[v] - N * p_t[v]) < 5 * sigma, \
+            (v, counts[v], N * p_t[v], sigma)
+    # top-k: tokens the target truncated away must never be emitted
+    if cfg.top_k:
+        assert np.all(counts[p_t == 0.0] == 0)
+
+
+def test_spec_verify_greedy_matches_argmax():
+    """Greedy verify emits the target argmax at every position and
+    accepts exactly the longest matching draft prefix."""
+    cfg = SamplerConfig()
+    logits = jax.random.normal(jax.random.key(5), (2, 4, 16))
+    tgt = np.asarray(jnp.argmax(logits, -1))
+    drafts = jnp.asarray(np.stack([
+        tgt[0, :3],                                  # full match -> accept 3
+        [tgt[1, 0], (tgt[1, 1] + 1) % 16, tgt[1, 2]],  # mismatch at 1
+    ]).astype(np.int32))
+    emitted, n_accept = spec_verify_tokens(logits, drafts, None,
+                                           jax.random.key(0), cfg)
+    np.testing.assert_array_equal(np.asarray(emitted), tgt)
+    np.testing.assert_array_equal(np.asarray(n_accept), [3, 1])
+
+
+def test_spec_rejection_sampling_hypothesis():
+    """Property form of the distribution test over random shapes/seeds
+    (runs only where the optional ``hypothesis`` dependency exists)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 3))
+    @hyp.settings(max_examples=10, deadline=None)
+    def run(seed, k):
+        cfg = SamplerConfig(temperature=1.0)
+        V, N = 6, 4_000
+        kt, kd, ks = jax.random.split(jax.random.key(seed), 3)
+        t_logits = jax.random.normal(kt, (1, k + 1, V))
+        d_logits = jax.random.normal(kd, (1, k, V))
+        p_t = np.asarray(jax.nn.softmax(_transformed(t_logits[:, 0], cfg)))[0]
+        toks = jax.vmap(
+            lambda r: _emit_first_token(t_logits, d_logits, cfg, r)
+        )(jax.random.split(ks, N))
+        counts = np.bincount(np.asarray(toks), minlength=V).astype(float)
+        for v in range(V):
+            sigma = max(math.sqrt(N * p_t[v] * (1 - p_t[v])), 1.0)
+            assert abs(counts[v] - N * p_t[v]) < 6 * sigma
+
+    run()
+
+
+# -------------------------------------------------------------- telemetry
+def test_spec_trace_and_registry(model_params, draft):
+    """A traced spec run pairs spec_propose/spec_verify marks, exports an
+    acceptance counter track, and surfaces the acceptance metrics through
+    the registry."""
+    model, params = model_params
+    dmodel, dparams = draft
+    tracer = Tracer()
+    _, eng = _serve(model, params, PROMPTS, async_mode=True, tracer=tracer,
+                    spec_depth=2, draft_model=dmodel, draft_params=dparams)
+    proposes = [e for e in tracer.events if e.name == "spec_propose"]
+    verifies = [e for e in tracer.events if e.name == "spec_verify"]
+    assert len(proposes) == eng.stats.spec_steps >= 1
+    assert len(verifies) == eng.stats.spec_steps
+    # verify marks are stamped at their window's dispatch step: pairable
+    assert {e.step for e in proposes} == {e.step for e in verifies}
+    assert sum(e.attrs["accepted"] for e in verifies) == \
+        eng.stats.accepted_tokens
+    obj = to_chrome_trace(tracer)
+    assert any(e["ph"] == "C" and e["name"] == "accepted_per_step"
+               for e in obj["traceEvents"])
+    snap = engine_registry(eng.stats).snapshot()
+    assert snap["spec_steps"] == float(eng.stats.spec_steps)
+    assert snap["drafted_tokens"] == float(eng.stats.drafted_tokens)
+    assert snap["accepted_tokens"] == float(eng.stats.accepted_tokens)
+    assert snap["spec_accept_rate"] == eng.stats.acceptance_rate
+    assert snap["spec_accept_frac_count"] == \
+        float(len(eng.stats.spec_accept_samples))
+
+
+# ------------------------------------------------------------- guardrails
+def test_spec_rejects_invalid_configs(model_params, draft):
+    model, params = model_params
+    dmodel, dparams = draft
+    with pytest.raises(ValueError):
+        Engine(model, params, n_slots=2, max_seq=32, spec_depth=-1)
+    with pytest.raises(ValueError):
+        Engine(model, params, n_slots=2, max_seq=32, spec_depth=2)  # no draft
+    with pytest.raises(NotImplementedError):
+        Engine(model, params, n_slots=2, max_seq=32, spec_depth=2,
+               draft_model=dmodel, draft_params=dparams,
+               cache_kind="paged", block_size=8, kv_dtype="fp8")
