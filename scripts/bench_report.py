@@ -1,0 +1,129 @@
+"""Render the committed BENCH_<n>.json trajectory as a trend report.
+
+  python scripts/bench_report.py [--root .] [--out bench_report.txt]
+                                 [--drift-pct 25]
+
+Each ``BENCH_<n>.json`` snapshot (written by ``benchmarks/run.py
+--trajectory``) is one column; metrics are rows.  The report prints every
+metric's trajectory oldest-to-newest and flags **drifts**: a metric whose
+latest value moved more than ``--drift-pct`` percent from the previous
+snapshot.  ``BENCH_ci.json`` (the reduced-shape CI baseline) is listed
+separately — it is a different measurement shape, not a trajectory point.
+
+This is a trend *report*, not a gate: CI uploads it as an artifact so a
+reviewer can eyeball how the perf trajectory moved across PRs, while the
+pass/fail bar stays ``benchmarks/ci_gate.py``.  Exits nonzero only when
+no snapshots exist or a snapshot is unreadable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+
+def load_snapshots(root: Path) -> list[tuple[int, dict]]:
+    """(n, payload) for every BENCH_<n>.json under root, ordered by n."""
+    snaps = []
+    for p in sorted(root.glob("BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", p.name)
+        if not m:
+            continue
+        snaps.append((int(m.group(1)), json.loads(p.read_text())))
+    snaps.sort(key=lambda t: t[0])
+    return snaps
+
+
+def flatten(payload: dict) -> dict[str, float]:
+    """``{bench: {metric: value}}`` -> ``{"bench.metric": value}``."""
+    flat: dict[str, float] = {}
+    for bench, metrics in sorted(payload.items()):
+        if not isinstance(metrics, dict):
+            continue
+        for name, value in sorted(metrics.items()):
+            if isinstance(value, (int, float)):
+                flat[f"{bench}.{name}"] = float(value)
+    return flat
+
+
+def drift(prev: float, cur: float) -> float:
+    """Relative change in percent (0 when prev is 0 and cur is 0)."""
+    if prev == 0.0:
+        return 0.0 if cur == 0.0 else float("inf")
+    return (cur - prev) / abs(prev) * 100.0
+
+
+def render(snaps: list[tuple[int, dict]], drift_pct: float,
+           ci: dict | None = None) -> str:
+    """The full report: trend table + drift section (+ CI baseline)."""
+    cols = [n for n, _ in snaps]
+    flats = [flatten(payload) for _, payload in snaps]
+    metrics = sorted(set().union(*flats)) if flats else []
+    name_w = max((len(m) for m in metrics), default=6)
+    lines = ["perf trajectory " +
+             " -> ".join(f"BENCH_{n}" for n in cols), ""]
+    header = f"{'metric':<{name_w}} " + " ".join(f"{f'#{n}':>10}"
+                                                 for n in cols)
+    lines += [header, "-" * len(header)]
+    drifts: list[str] = []
+    for m in metrics:
+        cells = []
+        for f in flats:
+            v = f.get(m)
+            cells.append(f"{v:>10.4g}" if v is not None else f"{'-':>10}")
+        lines.append(f"{m:<{name_w}} " + " ".join(cells))
+        have = [f[m] for f in flats if m in f]
+        if len(have) >= 2:
+            d = drift(have[-2], have[-1])
+            if abs(d) > drift_pct:
+                drifts.append(f"  {m}: {have[-2]:.4g} -> {have[-1]:.4g} "
+                              f"({d:+.1f}%)")
+    lines.append("")
+    if drifts:
+        lines.append(f"DRIFTS (> {drift_pct:g}% vs previous snapshot):")
+        lines += drifts
+    else:
+        lines.append(f"no drifts > {drift_pct:g}% vs previous snapshot")
+    if ci:
+        lines += ["", "CI baseline (BENCH_ci.json, reduced shapes — not a "
+                      "trajectory point):"]
+        for m, v in sorted(flatten(ci).items()):
+            lines.append(f"  {m} = {v:.4g}")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".",
+                    help="directory holding BENCH_<n>.json snapshots")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write the report here (the CI artifact)")
+    ap.add_argument("--drift-pct", type=float, default=25.0,
+                    help="flag metrics whose latest value moved more than "
+                         "this percent from the previous snapshot")
+    args = ap.parse_args(argv)
+    root = Path(args.root)
+    try:
+        snaps = load_snapshots(root)
+    except (OSError, ValueError) as e:
+        print(f"cannot read trajectory under {root}: {e}", file=sys.stderr)
+        return 1
+    if not snaps:
+        print(f"no BENCH_<n>.json snapshots under {root}", file=sys.stderr)
+        return 1
+    ci = None
+    ci_path = root / "BENCH_ci.json"
+    if ci_path.exists():
+        ci = json.loads(ci_path.read_text())
+    report = render(snaps, args.drift_pct, ci)
+    print(report, end="")
+    if args.out:
+        Path(args.out).write_text(report)
+        print(f"(written to {args.out})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

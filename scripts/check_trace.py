@@ -21,7 +21,9 @@ from repro.serving.telemetry import validate_trace
 
 def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False,
           expect_migrate_marks: bool = False,
-          expect_spec_marks: bool = False) -> list[str]:
+          expect_spec_marks: bool = False,
+          expect_slo_marks: bool = False,
+          expect_measured_counters: bool = False) -> list[str]:
     """Return problem strings (empty = the trace passes the smoke bar)."""
     problems = validate_trace(obj)
     if problems:
@@ -33,6 +35,9 @@ def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False,
     n_migrates = 0
     n_proposes = 0
     n_verifies = 0
+    n_slo = 0
+    measured = {"measured_mfu": 0, "measured_mbu": 0, "achieved_gbps": 0}
+    counter_ts: dict[tuple[int, str], float] = {}
     for e in events:
         args = e.get("args", {})
         if e["ph"] == "X" and e["name"].startswith("decode") and e["dur"] >= 0:
@@ -47,6 +52,29 @@ def check(obj: dict, n_replicas: int, expect_spill_marks: bool = False,
             n_proposes += 1
         if e["ph"] == "i" and e["name"] == "spec_verify":
             n_verifies += 1
+        if e["ph"] == "i" and e["name"] == "slo_breach":
+            n_slo += 1
+        if e["ph"] == "C":
+            if e["name"] in measured:
+                measured[e["name"]] += 1
+            # counter tracks must advance monotonically in ts per
+            # (pid, name) series or Perfetto draws garbage graphs
+            key = (e["pid"], e["name"])
+            prev = counter_ts.get(key)
+            if prev is not None and e["ts"] < prev:
+                problems.append(
+                    f"counter {e['name']} pid={e['pid']}: ts regressed "
+                    f"{prev} -> {e['ts']}"
+                )
+            counter_ts[key] = e["ts"]
+    if expect_slo_marks and n_slo == 0:
+        problems.append("no slo_breach marks (SLO smoke expected >= 1)")
+    if expect_measured_counters:
+        for name, n in measured.items():
+            if n == 0:
+                problems.append(
+                    f"no {name} counter events (profiler smoke expected >= 1)"
+                )
     if expect_spill_marks and n_spills == 0:
         problems.append("no kv_spill marks (host-tier smoke expected >= 1)")
     if expect_spec_marks and n_proposes == 0:
@@ -102,6 +130,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="require at least one spec_propose and one "
                          "spec_verify instant event (the speculative "
                          "decoding serve smoke)")
+    ap.add_argument("--expect-slo-marks", action="store_true",
+                    help="require at least one slo_breach instant event "
+                         "(the SLO-monitored workload serve smoke)")
+    ap.add_argument("--expect-measured-counters", action="store_true",
+                    help="require measured_mfu/measured_mbu/achieved_gbps "
+                         "counter events (the sampled-profiler serve smoke)")
     args = ap.parse_args(argv)
     try:
         obj = json.loads(open(args.trace).read())
@@ -109,7 +143,8 @@ def main(argv: list[str] | None = None) -> int:
         print(f"cannot read trace {args.trace}: {e}", file=sys.stderr)
         return 1
     problems = check(obj, args.replicas, args.expect_spill_marks,
-                     args.expect_migrate_marks, args.expect_spec_marks)
+                     args.expect_migrate_marks, args.expect_spec_marks,
+                     args.expect_slo_marks, args.expect_measured_counters)
     if problems:
         print(f"trace check FAILED for {args.trace}:", file=sys.stderr)
         for p in problems:

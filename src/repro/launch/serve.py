@@ -51,6 +51,21 @@ the last prefill chunk completes.  ``--decode-slots N`` gives the
 decode-role replicas a larger slot count than ``--slots`` (their block
 budget scales along).  When the host has enough devices each replica is
 placed on its own mesh slice; otherwise all replicas share the host mesh.
+
+Observability (see ``docs/observability.md``):
+
+* ``--workload {random,poisson,bursty,chat-fan,rag,agentic}`` replaces
+  the all-at-round-0 prompt list with a seeded arrival process played by
+  :class:`~repro.serving.workload.WorkloadDriver` (``--arrival-rate``,
+  ``--fan``, ``--turns``, ``--workload-seed`` shape it);
+* ``--slo-ttft N`` / ``--slo-tpot M`` declare engine-step SLO targets:
+  the run reports sliding-window p50/p99, attainment fraction and
+  goodput, and the trace gains ``slo_breach`` marks;
+* ``--profile N`` samples every Nth dispatch with a fenced wall-clock
+  measurement (``1`` = sync mode, times everything; ``0`` = off;
+  default: 8 when ``--trace`` is given) and joins it with the analytic
+  cost model into measured MFU/MBU/bandwidth counter tracks;
+* ``--dashboard N`` prints a terminal snapshot every N rounds.
 """
 from __future__ import annotations
 
@@ -58,24 +73,28 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import SHAPES, get_config
 from repro.configs.reduced import reduce_config
 from repro.core import balance
+from repro.core.oi import DEVICES
 from repro.core.placement import Env
 from repro.launch.mesh import make_host_mesh, mesh_axes, replica_meshes
 from repro.models.registry import build_model
 from repro.serving.cluster import ROUTE_POLICIES, Cluster, parse_roles
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
 from repro.serving.sampler import SamplerConfig
 from repro.serving.telemetry import (
+    SLOMonitor,
     Tracer,
     cluster_registry,
     engine_registry,
+    make_profiler,
+    render_dashboard,
     write_metrics,
     write_trace,
 )
+from repro.serving.workload import WORKLOADS, WorkloadDriver, build_workload
 
 
 def main():
@@ -152,6 +171,38 @@ def main():
                          "Perfetto/Chrome-trace JSON here")
     ap.add_argument("--metrics-out", default=None, metavar="OUT.json",
                     help="write the metrics-registry snapshot as flat JSON")
+    ap.add_argument("--workload", choices=WORKLOADS, default="random",
+                    help="arrival-process shape (random = legacy: every "
+                         "request at round 0)")
+    ap.add_argument("--workload-seed", type=int, default=0,
+                    help="seed for the workload generator (same seed = "
+                         "byte-identical schedule)")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="open-loop arrival rate in requests/round for "
+                         "poisson/bursty/chat-fan/rag/agentic workloads")
+    ap.add_argument("--fan", type=int, default=4,
+                    help="chat-fan: requests sharing each prompt prefix")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="agentic: total turns per session (each turn "
+                         "resubmits with the prior output as grown prefix)")
+    ap.add_argument("--slo-ttft", type=int, default=None, metavar="STEPS",
+                    help="TTFT SLO target in engine steps; enables the "
+                         "attainment/goodput report and slo_breach trace "
+                         "marks")
+    ap.add_argument("--slo-tpot", type=float, default=None, metavar="STEPS",
+                    help="per-output-token SLO target in engine steps")
+    ap.add_argument("--profile", type=int, default=None, metavar="N",
+                    help="fence + wall-clock every Nth dispatch and join "
+                         "with the analytic cost model into measured "
+                         "MFU/MBU/bandwidth (1 = sync: every dispatch; "
+                         "0 = off; default: 8 with --trace, else off)")
+    ap.add_argument("--profile-device", choices=sorted(DEVICES),
+                    default="TPU-V5E",
+                    help="device peaks used for measured MFU/MBU")
+    ap.add_argument("--dashboard", type=int, default=0, metavar="N",
+                    help="print a terminal snapshot every N driver rounds "
+                         "(queue depth, active slots, pipeline depth, pool "
+                         "util, SLO attainment, measured MFU/MBU)")
     args = ap.parse_args()
 
     cfg = reduce_config(args.arch) if args.reduced else get_config(args.arch)
@@ -198,7 +249,16 @@ def main():
             draft_model=draft_model,
             draft_params=draft_model.init(jax.random.key(1)),
         )
-    tracer = Tracer(wall=True) if args.trace else None
+    # SLO monitoring rides the tracer's lifecycle hooks, so declaring a
+    # target implies a tracer even without --trace (nothing is written)
+    slo = None
+    if args.slo_ttft is not None or args.slo_tpot is not None:
+        slo = SLOMonitor(ttft_target=args.slo_ttft, tpot_target=args.slo_tpot)
+    tracer = Tracer(wall=True, slo=slo) if (args.trace or slo) else None
+    sample_every = args.profile
+    if sample_every is None:
+        sample_every = 8 if args.trace else 0
+    profiler = make_profiler(sample_every, device=args.profile_device)
     roles = parse_roles(args.role_map, args.replicas) if args.role_map else None
     role_kw = ({"decode": {"n_slots": args.decode_slots}}
                if args.decode_slots else None)
@@ -217,22 +277,35 @@ def main():
                 return build_model(cfg, env_i)
     cluster = (
         Cluster(model, params, args.replicas, route=args.route, tracer=tracer,
+                profiler=profiler if profiler.enabled else None,
                 roles=roles, role_kw=role_kw, model_factory=model_factory,
                 **engine_kw)
         if args.replicas > 1 else None
     )
     eng = (cluster.engines[0] if cluster
-           else Engine(model, params, tracer=tracer, **engine_kw))
+           else Engine(model, params, tracer=tracer,
+                       profiler=profiler if profiler.enabled else None,
+                       **engine_kw))
     serv = cluster if cluster else eng
-    rng = np.random.default_rng(0)
-    for uid in range(args.requests):
-        plen = int(rng.integers(4, args.max_seq // 2))
-        prompt = rng.integers(1, cfg.vocab, size=plen).astype(np.int32)
-        serv.submit(Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new))
+    arrivals = build_workload(
+        args.workload, args.requests, vocab=cfg.vocab, max_seq=args.max_seq,
+        max_new=args.max_new, seed=args.workload_seed,
+        rate=args.arrival_rate, fan=args.fan, turns=args.turns,
+    )
+    on_round = None
+    if args.dashboard:
+        def on_round(r, _every=args.dashboard):
+            if r % _every == 0:
+                print(render_dashboard(serv, r, slo=slo, profiler=profiler))
+    driver = WorkloadDriver(serv, arrivals, vocab=cfg.vocab,
+                            max_seq=args.max_seq, seed=args.workload_seed,
+                            on_round=on_round)
 
     t0 = time.time()
-    stats = serv.run()
+    rounds = driver.run()
     dt = time.time() - t0
+    stats = serv.stats() if cluster else eng.stats
+    n_requests = len(driver.submitted)
     # all reported numbers flow through the metrics registry — the CLI
     # printout and the --metrics-out dump read the same snapshot
     registry = (
@@ -241,15 +314,22 @@ def main():
             stats, eng.pool.stats if args.cache == "paged" else None
         )
     )
+    if slo is not None:
+        slo.register(registry, elapsed=rounds)
+    if profiler.enabled:
+        profiler.register(registry)
     snap = registry.snapshot()
     print(f"mode: async={args.async_mode} sample={mode} "
           f"(T={sampler.temperature} top_k={sampler.top_k})")
+    print(f"workload: {args.workload} seed={args.workload_seed} "
+          f"submitted={n_requests} resubmits={driver.resubmits} "
+          f"rounds={rounds}")
     if cluster:
         role_str = (" roles=" + ",".join(cluster.roles)
                     if args.role_map else "")
         print(f"cluster: replicas={args.replicas} route={args.route}"
               f"{role_str}")
-        print(f"requests={args.requests} {stats.summary()}")
+        print(f"requests={n_requests} {stats.summary()}")
         if stats.migrations:
             print(f"disagg: migrations={stats.migrations} "
                   f"refold_moves={stats.refold_moves} "
@@ -264,7 +344,7 @@ def main():
             for i, e in enumerate(cluster.engines):
                 print(f"pool[r{i}]: {e.pool.stats}")
     else:
-        print(f"requests={args.requests} prefills={stats.prefills} "
+        print(f"requests={n_requests} prefills={stats.prefills} "
               f"prefill_chunks={stats.prefill_chunks} "
               f"boundary_packs={stats.boundary_packs} "
               f"decode_steps={stats.decode_steps} "
@@ -290,13 +370,27 @@ def main():
                       f"rehydrations={stats.rehydrations} "
                       f"host_peak={eng.pool.stats.host_peak_in_use}"
                       f"/{args.host_blocks} blocks")
+    if slo is not None:
+        print(slo.describe())
+        print(f"goodput: {slo.goodput(rounds):.2f} SLO-attaining "
+              f"tokens/round over {rounds} rounds")
+    if profiler.enabled:
+        print(profiler.describe())
+        for key, row in sorted(profiler.summary().items()):
+            kind, bucket, batch = key
+            print(f"  measured {kind:10s} bucket={bucket} batch={batch}: "
+                  f"n={int(row['n'])} {row['seconds']*1e3:.2f}ms "
+                  f"mfu={row['measured_mfu']:.4f} "
+                  f"mbu={row['measured_mbu']:.4f} "
+                  f"bw={row['achieved_gbps']:.1f}GB/s")
     if args.trace:
         path = write_trace(tracer, args.trace)
         print(f"trace: {path} (open at ui.perfetto.dev)")
     if args.metrics_out:
         path = write_metrics(
             registry, args.metrics_out,
-            extra={"wall_s": dt, "requests": float(args.requests)},
+            extra={"wall_s": dt, "rounds": float(rounds),
+                   "requests": float(n_requests)},
         )
         print(f"metrics: {path}")
 

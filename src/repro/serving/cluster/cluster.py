@@ -123,6 +123,7 @@ class Cluster:
         route: str = "round_robin",
         roles=None,
         tracer=None,
+        profiler=None,
         model_factory=None,
         role_kw: dict[str, dict] | None = None,
         **engine_kw,
@@ -130,6 +131,7 @@ class Cluster:
         if n_replicas < 1:
             raise ValueError(f"need >= 1 replica, got {n_replicas}")
         self.tracer = NULL_TRACER if tracer is None else tracer
+        self.profiler = profiler
         self.roles = parse_roles(roles, n_replicas)
         role_kw = role_kw or {}
         self.engines = []
@@ -140,8 +142,8 @@ class Cluster:
             kw = {**engine_kw, **role_kw.get(role, {})}
             mdl = model if model_factory is None else model_factory(i)
             self.engines.append(
-                Engine(mdl, params, tracer=self.tracer, replica=i, role=role,
-                       **kw)
+                Engine(mdl, params, tracer=self.tracer,
+                       profiler=self.profiler, replica=i, role=role, **kw)
             )
         self.router = Router(self.engines, route, tracer=self.tracer,
                              roles=self.roles)

@@ -124,6 +124,7 @@ from repro.serving.sampler import (
 )
 from repro.serving.scheduler import PrefillChunk, Scheduler
 from repro.serving.telemetry import (
+    NULL_PROFILER,
     NULL_TRACER,
     DispatchCostModel,
     StepRecord,
@@ -301,6 +302,7 @@ class Engine:
         draft_model: Model | None = None,
         draft_params: Pytree | None = None,
         tracer=None,
+        profiler=None,
         replica: int = 0,
         role: str = "mixed",
     ):
@@ -371,14 +373,17 @@ class Engine:
         self.slots: list[Request | None] = [None] * n_slots
         self.stats = EngineStats()
         self.rng = rng if rng is not None else jax.random.key(0)
-        # telemetry: NULL_TRACER hooks are no-ops, and `enabled` gates the
-        # per-dispatch StepRecord construction so a disabled run does no
-        # extra host work at all; everything records at dispatch/observe
-        # boundaries — never inside jit-traced code
+        # telemetry: NULL_TRACER / NULL_PROFILER hooks are no-ops, and
+        # `_telemetry` gates the per-dispatch StepRecord construction so a
+        # disabled run does no extra host work at all; the tracer records
+        # at dispatch/observe boundaries — never inside jit-traced code —
+        # and only the profiler's explicitly sampled dispatches fence
         self.tracer = NULL_TRACER if tracer is None else tracer
+        self.profiler = NULL_PROFILER if profiler is None else profiler
+        self._telemetry = self.tracer.enabled or self.profiler.enabled
         self.replica = replica
         self._cost_model = (
-            DispatchCostModel(model.cfg) if self.tracer.enabled else None
+            DispatchCostModel(model.cfg) if self._telemetry else None
         )
 
         self._prefill = jax.jit(model.prefill)
@@ -1796,14 +1801,15 @@ class Engine:
         return pre_tok
 
     # ------------------------------------------------------------ telemetry
-    def _trace_prefill_dispatch(self, n_tokens: int, n_steps: int) -> None:
+    def _trace_prefill_dispatch(self, n_tokens: int, n_steps: int) -> StepRecord:
         """StepRecord for a whole-prompt admission prefill (decode-only
         schedule), charged at its ``ceil(L / prefill_chunk)``-step cost.
-        Called only when tracing is enabled."""
+        Called only when telemetry is enabled; returns the record (already
+        handed to the tracer) so the profiler can annotate it in place."""
         cm = self._cost_model
         ctx = cm.chunk_ctx_tokens(0, n_tokens)
         flops, bytes_ = cm.cost(0, 0, n_tokens, ctx)
-        self.tracer.on_step(StepRecord(
+        rec = StepRecord(
             replica=self.replica, step=self.stats.engine_steps,
             kind="prefill", decode_batch=0, prefill_tokens=n_tokens,
             bucket=None, bucket2=None,
@@ -1818,16 +1824,20 @@ class Engine:
             pipeline_depth=len(self._pending),
             flops=flops, bytes=bytes_, oi=flops / max(bytes_, 1.0),
             wall=self.tracer.wall(),
-        ))
+        )
+        self.tracer.on_step(rec)
+        return rec
 
     def _trace_step(self, kind: str, active: list[int],
                     work: PrefillChunk | None = None,
-                    work2: PrefillChunk | None = None) -> None:
+                    work2: PrefillChunk | None = None) -> StepRecord:
         """StepRecord for one decode/fused dispatch: composition (batch,
         chunk, budget fill, pool pressure, pipeline depth) plus analytic
         FLOPs/bytes so each dispatch lands on the paper's Fig-1 roofline.
-        Called only when tracing is enabled, from host bookkeeping the
-        engine already holds — no device reads."""
+        Called only when telemetry is enabled, from host bookkeeping the
+        engine already holds — no device reads.  Returns the record
+        (already handed to the tracer) so the sampled profiler can join
+        its fenced wall-clock measurement onto it in place."""
         cm = self._cost_model
         kv = 0
         for i in active:
@@ -1841,7 +1851,7 @@ class Engine:
         budget = (self.sched.token_budget if self.schedule == "hybrid"
                   else len(self.slots))
         flops, bytes_ = cm.cost(len(active), kv, pre, ctx)
-        self.tracer.on_step(StepRecord(
+        rec = StepRecord(
             replica=self.replica, step=self.stats.engine_steps, kind=kind,
             decode_batch=len(active), prefill_tokens=pre,
             bucket=work.bucket if work is not None else None,
@@ -1856,7 +1866,20 @@ class Engine:
             pipeline_depth=len(self._pending),
             flops=flops, bytes=bytes_, oi=flops / max(bytes_, 1.0),
             wall=self.tracer.wall(),
-        ))
+        )
+        self.tracer.on_step(rec)
+        return rec
+
+    def _profile_fence(self):
+        """The pytree the profiler blocks on to bracket a sampled
+        dispatch: cache (+ paged staging buffers, + async token state)
+        covers every array the jit chain writes.  ``block_until_ready``
+        skips None subtrees, so missing pieces cost nothing."""
+        return (
+            self.cache,
+            getattr(self, "staging", None),
+            self._tok_state if self.async_mode else None,
+        )
 
     def _dispatch_kind(self, active, work, work2) -> str:
         spec = bool(self.spec_depth and active)
@@ -1909,13 +1932,21 @@ class Engine:
             return self.sched.has_work()
         self.stats.peak_active = max(self.stats.peak_active, len(active))
 
+        prof = self.profiler
+        sampling = prof.enabled and prof.tick()
+        if sampling:
+            prof.begin(self._profile_fence())
         logits, self.cache = self._decode(
             self.params, self.cache, self._decode_tokens()
         )
+        if sampling:
+            prof.end(self._profile_fence())
         self.stats.decode_steps += 1
         self.stats.engine_steps += 1
-        if self.tracer.enabled:
-            self._trace_step("decode", active)
+        if self._telemetry:
+            rec = self._trace_step("decode", active)
+            if sampling:
+                prof.commit(rec)
         self._finish_decode(active, logits)
         return any(s is not None for s in self.slots) or self.sched.has_work()
 
@@ -1929,6 +1960,10 @@ class Engine:
             return any(s is not None for s in self.slots) or self.sched.has_work()
         self.stats.peak_active = max(self.stats.peak_active, len(active))
 
+        prof = self.profiler
+        sampling = prof.enabled and prof.tick()
+        if sampling:
+            prof.begin(self._profile_fence())    # settle in-flight steps
         eos = n_accept = None
         if self.spec_depth:
             (self._tok_state, toks, n_accept,
@@ -1942,6 +1977,8 @@ class Engine:
                 self._eos_dev, sampler=self.sampler,
             )
             self._tok_state = toks
+        if sampling:
+            prof.end(self._profile_fence())
         self.stats.decode_steps += 1
         self.stats.engine_steps += 1
         charge = 1
@@ -1949,8 +1986,12 @@ class Engine:
             charge = self.spec_depth + 1
             self.stats.spec_steps += 1
             self.stats.draft_steps += self.spec_depth + 1
-        if self.tracer.enabled:
-            self._trace_step("spec" if self.spec_depth else "decode", active)
+        if self._telemetry:
+            rec = self._trace_step(
+                "spec" if self.spec_depth else "decode", active
+            )
+            if sampling:
+                prof.commit(rec)
             if self.spec_depth:
                 self.tracer.on_spec_propose(
                     self.replica, self.stats.engine_steps,
@@ -2020,6 +2061,10 @@ class Engine:
                 if work2 is not None:
                     chunk2, off2, nv2 = self._chunk_arrays(work2)
 
+        prof = self.profiler
+        sampling = prof.enabled and prof.tick()
+        if sampling:
+            prof.begin(self._profile_fence())
         dec_logits = pre_logits = logits2 = None
         if work2 is not None:
             self.stats.boundary_packs += 1
@@ -2075,9 +2120,13 @@ class Engine:
         else:
             pre_logits = self._exec_solo_sync(work)
 
-        if self.tracer.enabled:
-            self._trace_step(self._dispatch_kind(active, work, work2),
-                             active, work, work2)
+        if sampling:
+            prof.end(self._profile_fence())
+        if self._telemetry:
+            rec = self._trace_step(self._dispatch_kind(active, work, work2),
+                                   active, work, work2)
+            if sampling:
+                prof.commit(rec)
         if active:
             self._finish_decode(active, dec_logits)
         if work is not None:
@@ -2146,6 +2195,10 @@ class Engine:
                     wslot2 = np.int32(work2.slot)
                     lane2 = np.int32(self._pf_lane.get(work2.slot, 0))
 
+        prof = self.profiler
+        sampling = prof.enabled and prof.tick()
+        if sampling:
+            prof.begin(self._profile_fence())    # settle in-flight steps
         toks = eos = pre_tok = pre_tok2 = n_accept = None
         if work2 is not None:
             self.stats.boundary_packs += 1
@@ -2228,6 +2281,8 @@ class Engine:
         else:
             pre_tok = self._exec_solo_async(work, rng)
 
+        if sampling:
+            prof.end(self._profile_fence())
         charge = 1
         if self.spec_depth and active:
             charge = self.spec_depth + 1
@@ -2239,9 +2294,11 @@ class Engine:
                     self.spec_depth, len(active),
                 )
 
-        if self.tracer.enabled:
-            self._trace_step(self._dispatch_kind(active, work, work2),
-                             active, work, work2)
+        if self._telemetry:
+            srec = self._trace_step(self._dispatch_kind(active, work, work2),
+                                    active, work, work2)
+            if sampling:
+                prof.commit(srec)
         reqs = {}
         for i in active:
             req = self.slots[i]

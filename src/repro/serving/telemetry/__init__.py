@@ -4,14 +4,23 @@
   the engine-step clock (``tracer.py``);
 * :class:`StepRecord` / :class:`DispatchCostModel` — per-dispatch
   composition + analytic FLOPs/bytes/OI (``timeline.py``);
+* :class:`DispatchProfiler` / :data:`NULL_PROFILER` — sampled fenced
+  wall-clock per dispatch, joined with the analytic costs into measured
+  MFU/MBU/bandwidth (``profiler.py``);
+* :class:`SLOMonitor` — TTFT/TPOT targets, sliding-window attainment,
+  goodput (``slo.py``);
 * :class:`MetricsRegistry` + builders — the single reporting view over
   engine/cluster stats with exact percentiles (``metrics.py``);
-* Perfetto/Chrome-trace and metrics JSON exporters (``export.py``).
+* Perfetto/Chrome-trace and metrics JSON exporters (``export.py``);
+* :func:`render_dashboard` — periodic terminal snapshot
+  (``dashboard.py``).
 
 Telemetry is zero-cost when disabled (engines default to
-:data:`NULL_TRACER`) and records only at host-side dispatch/observe
-boundaries — never inside jit-traced code.
+:data:`NULL_TRACER` and :data:`NULL_PROFILER`) and — except for the
+profiler's explicitly sampled fences — records only at host-side
+dispatch/observe boundaries, never inside jit-traced code.
 """
+from repro.serving.telemetry.dashboard import render_dashboard
 from repro.serving.telemetry.export import (
     build_request_trees,
     to_chrome_trace,
@@ -28,6 +37,14 @@ from repro.serving.telemetry.metrics import (
     engine_registry,
     percentile,
 )
+from repro.serving.telemetry.profiler import (
+    NULL_PROFILER,
+    DispatchProfiler,
+    NullDispatchProfiler,
+    ProfileSample,
+    make_profiler,
+)
+from repro.serving.telemetry.slo import SLOMonitor
 from repro.serving.telemetry.timeline import DispatchCostModel, StepRecord
 from repro.serving.telemetry.tracer import (
     NULL_TRACER,
@@ -41,24 +58,31 @@ from repro.serving.telemetry.tracer import (
 )
 
 __all__ = [
+    "NULL_PROFILER",
     "NULL_TRACER",
     "TRACK_QUEUE",
     "TRACK_ROUTER",
     "TRACK_STEPS",
     "Counter",
     "DispatchCostModel",
+    "DispatchProfiler",
     "Event",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "NullDispatchProfiler",
     "NullTracer",
+    "ProfileSample",
+    "SLOMonitor",
     "Span",
     "StepRecord",
     "Tracer",
     "build_request_trees",
     "cluster_registry",
     "engine_registry",
+    "make_profiler",
     "percentile",
+    "render_dashboard",
     "to_chrome_trace",
     "validate_trace",
     "write_metrics",

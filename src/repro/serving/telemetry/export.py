@@ -132,6 +132,12 @@ def to_chrome_trace(tracer: Tracer) -> dict:
             counters["pool_util"] = rec.pool_util
         if rec.host_util is not None:
             counters["host_util"] = rec.host_util
+        if rec.measured_s is not None:
+            # sampled-profiler join: the measured twin of the analytic
+            # oi track, graphed by Perfetto as the live Fig-8 view
+            counters["measured_mfu"] = rec.measured_mfu
+            counters["measured_mbu"] = rec.measured_mbu
+            counters["achieved_gbps"] = rec.achieved_gbps
         for cname, val in counters.items():
             events.append({
                 "name": cname, "ph": "C", "pid": rec.replica, "tid": 0,

@@ -20,11 +20,18 @@ import math
 from typing import Any
 
 
-def percentile(samples: list, p: float) -> float:
-    """Exact nearest-rank percentile (p in [0, 100]); 0.0 on no samples."""
-    if not samples:
-        return 0.0
+def percentile(samples, p: float) -> float:
+    """Exact nearest-rank percentile over raw samples.
+
+    Edge cases are pinned by ``tests/test_observatory.py``: no samples
+    -> 0.0 (a snapshot of an empty histogram must not error), one sample
+    -> that sample for every ``p``, and ``p`` outside [0, 100] clamps to
+    the min/max sample instead of indexing out of range.
+    """
     s = sorted(samples)
+    if not s:
+        return 0.0
+    p = min(max(p, 0.0), 100.0)
     rank = max(1, math.ceil(p / 100.0 * len(s)))
     return float(s[min(rank, len(s)) - 1])
 

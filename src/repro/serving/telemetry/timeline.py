@@ -11,10 +11,12 @@ roofline: decode-only dispatches sit deep in the memory-bound regime,
 fused dispatches climb toward the ridge because the prefill chunk's
 GEMMs reuse the weight stream the decode batch already paid for.
 
-Records are built **only when tracing is enabled** (the engine guards on
-``tracer.enabled``) and only from host-side bookkeeping the engine
-already maintains — never from device arrays, so the dispatch-ahead
-pipeline keeps its overlap.
+Records are built **only when telemetry is enabled** (the engine guards
+on ``tracer.enabled or profiler.enabled``) and only from host-side
+bookkeeping the engine already maintains — never from device arrays, so
+the dispatch-ahead pipeline keeps its overlap.  When the sampled
+:class:`~repro.serving.telemetry.profiler.DispatchProfiler` fences a
+dispatch, it annotates that record's ``measured_*`` fields in place.
 """
 from __future__ import annotations
 
@@ -44,6 +46,12 @@ class StepRecord:
     oi: float                   # operational intensity = flops / bytes
     host_util: float | None = None  # host KV tier utilization (None: no tier)
     wall: float | None = None   # perf_counter at dispatch (Tracer(wall=True))
+    # measured join (DispatchProfiler, sampled dispatches only): fenced
+    # wall-clock seconds and the utilization it implies vs device peaks
+    measured_s: float | None = None
+    measured_mfu: float | None = None
+    measured_mbu: float | None = None
+    achieved_gbps: float | None = None
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -19,8 +19,18 @@ One request produces one span tree::
 
 plus instant events: ``admitted``, ``refolded`` (re-admission after a
 preemption, generated tokens folded into the prefill), ``first_token``,
-``preempted``, ``boundary_packed``, ``finish``, and cluster-level
+``preempted``, ``boundary_packed``, ``finish``, ``slo_breach`` (a
+declared TTFT/TPOT target missed — ``Tracer(slo=monitor)`` forwards
+first-token/finish observations to an
+:class:`~repro.serving.telemetry.slo.SLOMonitor`), and cluster-level
 ``route`` events (policy, chosen replica, spill).
+
+Async dispatch-ahead engines close spans at *observe* time, one step
+after the dispatch that produced the tokens.  Observe-time closes
+therefore carry two wall stamps when ``wall=True``: the close's own
+``t_end`` and a ``wall_dispatch`` attr looked up from the step's
+dispatch record — viewers can reconstruct the true device overlap from
+the pair.
 
 Tracks: spans carry a ``(replica, track)`` address — ``track`` is the
 engine slot the work ran on, or one of the reserved tracks
@@ -176,16 +186,24 @@ class Tracer:
 
     enabled = True
 
-    def __init__(self, wall: bool = False):
+    def __init__(self, wall: bool = False, slo=None):
         self.use_wall = wall
+        self.slo = slo                          # optional SLOMonitor
         self.spans: list[Span] = []
         self.events: list[Event] = []
         self.steps: list = []                   # StepRecord, append order
         self.requests: dict[tuple[int, int], _RequestState] = {}
         self.round = 0                          # cluster round (set by Cluster)
+        # (replica, step) -> wall stamp of that step's *dispatch*, so
+        # observe-time closes (async lands them a step later) can carry
+        # both stamps and trace viewers see the true overlap
+        self._step_wall: dict[tuple[int, int], float] = {}
 
     def wall(self) -> float | None:
         return time.perf_counter() if self.use_wall else None
+
+    def _dispatch_wall(self, replica: int, step: int) -> float | None:
+        return self._step_wall.get((replica, step)) if self.use_wall else None
 
     # ------------------------------------------------------ request lifecycle
     def _state(self, replica: int, req) -> _RequestState:
@@ -230,11 +248,14 @@ class Tracer:
                  bucket: int | None, last: bool) -> None:
         """One executed prefill chunk (a whole decode-only prefill is one
         chunk covering its ceil(L/prefill_chunk)-step cost)."""
+        attrs = {"pos": pos, "n_valid": n_valid, "bucket": bucket,
+                 "last": last}
+        wd = self._dispatch_wall(replica, end_step)
+        if wd is not None:
+            attrs["wall_dispatch"] = wd
         self.spans.append(Span(
             replica=replica, track=slot, uid=req.uid, name="prefill_chunk",
-            start=start_step, end=end_step, t_end=self.wall(),
-            attrs={"pos": pos, "n_valid": n_valid, "bucket": bucket,
-                   "last": last},
+            start=start_step, end=end_step, t_end=self.wall(), attrs=attrs,
         ))
 
     def on_first_token(self, replica: int, req, step: int, slot: int,
@@ -246,20 +267,46 @@ class Tracer:
         if first:
             self._event(replica, slot, req.uid, "first_token", step,
                         slot=slot)
+            if self.slo is not None:
+                ttft = max(step - st.submit_step, 0)
+                if self.slo.observe_ttft(req.uid, ttft):
+                    self._event(replica, slot, req.uid, "slo_breach", step,
+                                metric="ttft", value=ttft,
+                                target=self.slo.ttft_target)
         st.decode = Span(replica=replica, track=slot, uid=req.uid,
                          name="decode", start=step, t_start=self.wall())
+        wd = self._dispatch_wall(replica, step)
+        if wd is not None:
+            st.decode.attrs["wall_dispatch"] = wd
         self.spans.append(st.decode)
 
     def on_finish(self, replica: int, req, step: int, slot: int) -> None:
         st = self._state(replica, req)
+        wd = self._dispatch_wall(replica, step)
         if st.decode is not None and not st.decode.closed:
             st.decode.end = step
             st.decode.t_end = self.wall()
             st.decode.attrs["generated"] = len(req.out_tokens)
+            if wd is not None:
+                # async closes land at observe time, one step after the
+                # dispatch that produced the final token: record both
+                # stamps so viewers can show the true device overlap
+                st.decode.attrs["wall_dispatch"] = wd
         st.decode = None
         st.finished = True
-        self._event(replica, slot, req.uid, "finish", step,
-                    generated=len(req.out_tokens))
+        attrs = {"generated": len(req.out_tokens)}
+        if wd is not None:
+            attrs["wall_dispatch"] = wd
+        self._event(replica, slot, req.uid, "finish", step, **attrs)
+        if self.slo is not None:
+            gen = len(req.out_tokens)
+            first_step = getattr(req, "first_token_step", -1)
+            tpot = ((step - first_step) / max(gen - 1, 1)
+                    if 0 <= first_step <= step else 0.0)
+            if self.slo.observe_finish(req.uid, tpot, gen):
+                self._event(replica, slot, req.uid, "slo_breach", step,
+                            metric="tpot", value=tpot,
+                            target=self.slo.tpot_target)
 
     def on_preempt(self, replica: int, req, step: int, slot: int) -> None:
         """Eviction to the queue: the decode span ends here (marked), and
@@ -269,6 +316,9 @@ class Tracer:
             st.decode.end = step
             st.decode.t_end = self.wall()
             st.decode.attrs["preempted"] = True
+            wd = self._dispatch_wall(replica, step)
+            if wd is not None:
+                st.decode.attrs["wall_dispatch"] = wd
         st.decode = None
         self._event(replica, slot, req.uid, "preempted", step, slot=slot)
         st.queued = Span(replica=replica, track=TRACK_QUEUE, uid=req.uid,
@@ -317,6 +367,8 @@ class Tracer:
         """Append one per-dispatch StepRecord (built by the engine only
         when ``enabled`` — see ``Engine._trace_step``)."""
         self.steps.append(record)
+        if record.wall is not None:
+            self._step_wall[(record.replica, record.step)] = record.wall
 
     # --------------------------------------------------------------- router
     def on_route(self, uid: int, replica: int, policy: str, rank_pos: int,
